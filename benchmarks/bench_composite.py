@@ -1,0 +1,48 @@
+"""Paper Figs. 9-11: composite policies (user-then-size, group-user-size)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import metrics
+
+from .common import simulate
+
+
+def run_fig9_11() -> list[tuple]:
+    rows = []
+    # Fig 9: four jobs, two users; user-fair at level 1, size-fair within.
+    jobs = [dict(user=0, size=1, procs=56, req_mb=10, end_s=40),
+            dict(user=0, size=2, procs=112, req_mb=10, end_s=40),
+            dict(user=1, size=4, procs=112, req_mb=10, end_s=40),
+            dict(user=1, size=6, procs=112, req_mb=10, end_s=40)]
+    t0 = time.time()
+    res, _ = simulate("themis", jobs, 40, policy="user-then-size-fair")
+    us = (time.time() - t0) * 1e6
+    g = [metrics.median_gbps(res, j, 10, 35) for j in range(4)]
+    rows.append(("fig9_user_split_gbps", f"{us:.0f}",
+                 f"u1={g[0]+g[1]:.1f} u2={g[2]+g[3]:.1f} (paper 10.1/9.9)"))
+    rows.append(("fig9_within_user_ratios", f"{us:.0f}",
+                 f"{g[1]/max(g[0],1e-9):.2f}~2.0 {g[3]/max(g[2],1e-9):.2f}~1.5"))
+    # Fig 10/11: two groups, four users, eight jobs; group-user-size-fair.
+    jobs = [
+        dict(group=0, user=0, size=2, procs=56, req_mb=10, end_s=40),
+        dict(group=0, user=0, size=2, procs=56, req_mb=10, end_s=40),
+        dict(group=1, user=1, size=2, procs=56, req_mb=10, end_s=40),
+        dict(group=1, user=1, size=3, procs=84, req_mb=10, end_s=40),
+        dict(group=1, user=1, size=2, procs=56, req_mb=10, end_s=40),
+        dict(group=1, user=2, size=2, procs=56, req_mb=10, end_s=40),
+        dict(group=1, user=3, size=1, procs=56, req_mb=10, end_s=40),
+        dict(group=1, user=3, size=1, procs=56, req_mb=10, end_s=40),
+    ]
+    res, _ = simulate("themis", jobs, 40, policy="group-user-size-fair")
+    g = [metrics.median_gbps(res, j, 10, 35) for j in range(8)]
+    grp0 = g[0] + g[1]
+    grp1 = sum(g[2:])
+    u1 = g[2] + g[3] + g[4]
+    rows.append(("fig10_group_split_gbps", f"{us:.0f}",
+                 f"{grp0:.1f}/{grp1:.1f} (paper 9.5/11.2)"))
+    rows.append(("fig10_user1_jobs_ratio", f"{us:.0f}",
+                 f"{g[2]:.2f}:{g[3]:.2f}:{g[4]:.2f} ~ 2:3:2"))
+    rows.append(("fig10_total_gbps", f"{us:.0f}",
+                 f"{sum(g):.1f} (paper 20.7)"))
+    return rows

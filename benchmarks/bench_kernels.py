@@ -1,0 +1,46 @@
+"""Microbenchmarks: ThemisIO hot paths + kernel oracles on CPU.
+
+Wall-clock here is CPU; the derived column reports per-op work. The paper
+quotes ~1us per token draw (§5.3.1) on their hardware — we report ours.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import Policy
+from repro.core.job_table import make_table
+from repro.core.policy import compute_job_shares_from_table
+from repro.kernels.token_select.ref import token_select_ref
+
+
+def _time(fn, *args, iters=50):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_micro() -> list[tuple]:
+    rows = []
+    # token draw (paper: ~1us/op)
+    shares = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (8, 32)))
+    qcount = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 4)
+    u = jax.random.uniform(jax.random.PRNGKey(2), (8, 8))
+    f = jax.jit(token_select_ref)
+    us = _time(f, shares, qcount, u)
+    rows.append(("micro_token_select_8srv_x8workers", f"{us:.1f}",
+                 f"{us/64:.2f} us/draw (paper ~1us)"))
+    # policy chain recompute
+    t = make_table([{"user": i % 4, "group": i % 2, "size": 1 + i} for i in range(16)],
+                   max_jobs=32)
+    pol = Policy.parse("group-user-size-fair")
+    g = jax.jit(lambda: compute_job_shares_from_table(pol, t))
+    us = _time(lambda *_: g())
+    rows.append(("micro_policy_chain_3level_32slots", f"{us:.1f}", "Eq.1 product"))
+    return rows

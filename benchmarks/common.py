@@ -1,0 +1,26 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import EngineConfig, make_workload, metrics, run
+from repro.core.policy import Policy
+
+
+def simulate(scheduler, jobs, seconds, *, policy="job-fair", n_servers=1,
+             **cfg_kw):
+    cfg = EngineConfig(
+        n_servers=n_servers, max_jobs=max(8, len(jobs)),
+        scheduler=scheduler,
+        policy=Policy.parse(policy) if scheduler == "themis" else None,
+        **cfg_kw)
+    wl, table = make_workload(cfg, jobs)
+    return run(cfg, wl, table, seconds), cfg
+
+
+def emit(rows):
+    """name,us_per_call,derived CSV rows (assignment format)."""
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

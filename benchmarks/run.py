@@ -1,0 +1,43 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment format).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig12      # one section
+"""
+from __future__ import annotations
+
+import sys
+
+from .bench_apps import run_fig13
+from .bench_comparison import run_fig12
+from .bench_composite import run_fig9_11
+from .bench_kernels import run_micro
+from .bench_lambda import run_fig14
+from .bench_policies import run_fig8
+from .bench_scaling import run_fig7
+from .common import emit
+
+SECTIONS = {
+    "fig7": run_fig7,
+    "fig8": run_fig8,
+    "fig9": run_fig9_11,
+    "fig12": run_fig12,
+    "fig13": run_fig13,
+    "fig14": run_fig14,
+    "micro": run_micro,
+}
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in want:
+        key = next((k for k in SECTIONS if name.startswith(k)), None)
+        if key is None:
+            raise SystemExit(f"unknown section {name}; have {list(SECTIONS)}")
+        emit(SECTIONS[key]())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Multi-tenant serving: decode slots shared by ThemisIO statistical tokens.
+
+Three tenants with different provisioned sizes submit request streams; the
+engine enforces size-fair slot allocation (2:1:1) while staying
+work-conserving when a tenant goes idle.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine, Tenant
+
+
+def main():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, batch_slots=4, max_len=96,
+                      policy="size-fair")
+    t1 = Tenant(tenant_id=1, user=1, size=2)   # paid for 2x capacity
+    t2 = Tenant(tenant_id=2, user=2, size=1)
+    t3 = Tenant(tenant_id=3, user=3, size=1)
+    rng = np.random.default_rng(0)
+    # keep every tenant backlogged and measure decode shares over a window
+    for i in range(40):
+        for t in (t1, t2, t3):
+            eng.submit(t, rng.integers(0, cfg.vocab, size=4), max_new=12)
+    eng.run(steps=250)
+    d = eng.decoded_per_tenant
+    total = sum(d.values())
+    print("decoded tokens per tenant over window:", d)
+    print("shares:", {k: round(v / total, 2) for k, v in sorted(d.items())})
+    print("size-fair target while backlogged: {1: 0.5, 2: 0.25, 3: 0.25}")
+    # work conservation: drain tenant 2 & 3 queues, tenant 1 absorbs slack
+    eng.queues[2].clear(); eng.queues[3].clear()
+    for i in range(20):
+        eng.submit(t1, rng.integers(0, cfg.vocab, size=4), max_new=12)
+    before = dict(eng.decoded_per_tenant)
+    eng.run(steps=100)
+    gain = {k: eng.decoded_per_tenant.get(k, 0) - before.get(k, 0)
+            for k in (1, 2, 3)}
+    print("tokens decoded after tenants 2,3 go idle:", gain,
+          "(opportunity fairness keeps slots busy)")
+
+
+if __name__ == "__main__":
+    main()

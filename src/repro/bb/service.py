@@ -1,0 +1,303 @@
+"""Burst-buffer service: ThemisIO servers + metadata-stamped clients (§4).
+
+This is the *functional* plane (ordering, correctness, data integrity) that
+the discrete-event engine models the *performance* of.  Every client call is
+a Request carrying job metadata (job id, user, group, node count — §4.1);
+servers queue requests per job and drain them in statistical-token order
+computed by the same ``repro.core`` policy code the engine uses.  A virtual
+clock accounts service time (bytes / bandwidth) so tests can assert both
+ordering statistics and bounded-delay properties without wall-clock sleeps.
+
+The client is the POSIX-compliance analogue of the paper's override /
+trampoline interception (§4.4): Python has no glibc to intercept, so the
+file-like object *is* the interception boundary — applications use plain
+open/read/write/close semantics and never see job metadata being attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.job_table import JobTable, make_table
+from repro.core.policy import Policy
+from repro.core.global_sync import sync_segments
+from repro.core.tokens import select_job
+from repro.fs.store import FileSystem
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class JobMeta:
+    job_id: int
+    user: int = 0
+    group: int = 0
+    size: int = 1          # node count
+    priority: float = 1.0
+
+
+@dataclasses.dataclass
+class Request:
+    job: JobMeta
+    op: str                # write | read | stat | mkdir | readdir | unlink
+    path: str
+    offset: int = 0
+    data: Optional[bytes] = None
+    size: int = 0
+    seqno: int = 0
+    done_at: float = 0.0
+    result: object = None
+
+
+class BBServer:
+    """One burst-buffer node: job monitor + communicator + controller + workers."""
+
+    def __init__(self, sid: int, fs: FileSystem, *, n_workers: int = 8,
+                 bandwidth: float = 22e9, meta_op_s: float = 20e-6):
+        self.sid = sid
+        self.fs = fs
+        self.n_workers = n_workers
+        self.worker_bw = bandwidth / n_workers
+        self.meta_op_s = meta_op_s
+        self.queues: dict[int, deque[Request]] = {}
+        self.worker_free = np.zeros(n_workers)
+        self.known_jobs: dict[int, JobMeta] = {}
+        self.last_heartbeat: dict[int, float] = {}
+        self.segments: Optional[np.ndarray] = None  # λ-synced, set by cluster
+        self.processed: list[tuple[float, int, str]] = []  # (t, job, op)
+
+    # -- communicator ---------------------------------------------------------
+    def submit(self, req: Request):
+        self.known_jobs[req.job.job_id] = req.job
+        self.queues.setdefault(req.job.job_id, deque()).append(req)
+
+    def heartbeat(self, job: JobMeta, now: float):
+        self.known_jobs[job.job_id] = job
+        self.last_heartbeat[job.job_id] = now
+
+    def demand(self) -> dict[int, int]:
+        return {j: len(q) for j, q in self.queues.items() if q}
+
+    # -- worker ----------------------------------------------------------------
+    def _service(self, req: Request) -> float:
+        if req.op in ("stat", "mkdir", "readdir", "unlink", "create"):
+            return self.meta_op_s
+        n = len(req.data) if req.data is not None else req.size
+        return self.meta_op_s + n / self.worker_bw
+
+    def _execute(self, req: Request):
+        fs = self.fs
+        if req.op == "write":
+            fs.write(req.path, req.offset, req.data)
+        elif req.op == "read":
+            req.result = fs.read(req.path, req.offset, req.size)
+        elif req.op == "stat":
+            req.result = fs.stat(req.path)
+        elif req.op == "create":
+            req.result = fs.create(req.path)
+        elif req.op == "mkdir":
+            req.result = fs.create(req.path, is_dir=True)
+        elif req.op == "readdir":
+            req.result = fs.listdir(req.path)
+        elif req.op == "unlink":
+            fs.unlink(req.path)
+
+    def pop_order(self, shares: np.ndarray, slot_of: dict[int, int],
+                  key) -> Optional[Request]:
+        """One worker pop: statistical-token draw over per-job queues."""
+        jobs = sorted(self.queues)
+        if not jobs:
+            return None
+        nslots = len(shares)
+        qcount = np.zeros(nslots, np.int32)
+        for j in jobs:
+            if j in slot_of:
+                qcount[slot_of[j]] = len(self.queues[j])
+        if qcount.sum() == 0:
+            return None
+        u = float(jax.random.uniform(key, ()))
+        idx = int(select_job(jnp.asarray(shares), jnp.asarray(qcount > 0),
+                             jnp.float32(u)))
+        if idx < 0:
+            return None
+        inv = {v: k for k, v in slot_of.items()}
+        job = inv[idx]
+        return self.queues[job].popleft()
+
+
+class BBCluster:
+    """A group of I/O nodes + the λ-sync controller loop."""
+
+    def __init__(self, n_servers: int = 2, *, policy: str | Policy = "size-fair",
+                 n_workers: int = 8, bandwidth: float = 22e9,
+                 max_jobs: int = 32, lam_s: float = 0.5, seed: int = 0,
+                 stripes: int = 1):
+        self.fs = FileSystem(n_servers, default_stripes=stripes)
+        self.servers = [BBServer(s, self.fs, n_workers=n_workers,
+                                 bandwidth=bandwidth) for s in range(n_servers)]
+        self.policy = Policy.parse(policy) if isinstance(policy, str) else policy
+        self.max_jobs = max_jobs
+        self.lam_s = lam_s
+        self.clock = 0.0
+        self.last_sync = -1e9
+        self._key = jax.random.PRNGKey(seed)
+        self._seq = itertools.count()
+        self.slot_of: dict[int, int] = {}
+
+    def _slot(self, job_id: int) -> int:
+        if job_id not in self.slot_of:
+            self.slot_of[job_id] = len(self.slot_of)
+            if len(self.slot_of) > self.max_jobs:
+                raise RuntimeError("job slots exhausted")
+        return self.slot_of[job_id]
+
+    def _table(self) -> JobTable:
+        jobs = [None] * self.max_jobs
+        metas = {}
+        for srv in self.servers:
+            metas.update(srv.known_jobs)
+        specs = []
+        ordered = sorted(self.slot_of.items(), key=lambda kv: kv[1])
+        for job_id, slot in ordered:
+            m = metas.get(job_id, JobMeta(job_id))
+            specs.append({"user": m.user, "group": m.group, "size": m.size,
+                          "priority": m.priority})
+        return make_table(specs, max_jobs=self.max_jobs)
+
+    def sync(self):
+        """λ-sync: all-gather demand, Sinkhorn-balance global shares (§3.1)."""
+        table = self._table()
+        demand = np.zeros((len(self.servers), self.max_jobs), bool)
+        for si, srv in enumerate(self.servers):
+            for j, n in srv.demand().items():
+                demand[si, self._slot(j)] = n > 0
+        segs = np.asarray(sync_segments(self.policy, table, jnp.asarray(demand)))
+        for si, srv in enumerate(self.servers):
+            srv.segments = segs[si]
+        self.last_sync = self.clock
+
+    def submit(self, req: Request):
+        req.seqno = next(self._seq)
+        self._slot(req.job.job_id)
+        # route by first stripe server (data ops) / hash server (meta ops)
+        if req.op in ("write", "read"):
+            try:
+                plan = list(self.fs.stripe_plan(req.path, req.offset,
+                                                req.size or len(req.data or b"")))
+                sid = plan[0][0] if plan else 0
+            except FileNotFoundError:
+                sid = self.fs.ring.server_of(req.path)
+        else:
+            sid = self.fs.ring.server_of(req.path)
+        self.servers[sid].submit(req)
+
+    def drain(self) -> list[Request]:
+        """Process every queued request in scheduler order; returns them in
+        global completion order (the observable the paper's policies shape)."""
+        done: list[Request] = []
+        while True:
+            if self.clock - self.last_sync >= self.lam_s:
+                self.sync()
+            progressed = False
+            for srv in self.servers:
+                if srv.segments is None:
+                    self.sync()
+                for w in range(srv.n_workers):
+                    self._key, sub = jax.random.split(self._key)
+                    req = srv.pop_order(srv.segments, self.slot_of, sub)
+                    if req is None:
+                        continue
+                    progressed = True
+                    srv._execute(req)
+                    t0 = max(srv.worker_free[w], self.clock)
+                    srv.worker_free[w] = t0 + srv._service(req)
+                    req.done_at = srv.worker_free[w]
+                    srv.processed.append((req.done_at, req.job.job_id, req.op))
+                    done.append(req)
+            if not progressed:
+                break
+            self.clock = max(self.clock, min(s.worker_free.min()
+                                             for s in self.servers))
+        done.sort(key=lambda r: r.done_at)
+        return done
+
+
+class BBFile:
+    """POSIX-style file handle over the cluster (client side, §4.4)."""
+
+    def __init__(self, client: "BBClient", path: str, mode: str):
+        self.client = client
+        self.path = path
+        self.pos = 0
+        if "w" in mode:
+            client._req("create", path)
+
+    def write(self, data: bytes) -> int:
+        self.client._req("write", self.path, offset=self.pos, data=data)
+        self.pos += len(data)
+        return len(data)
+
+    def read(self, size: int = -1) -> bytes:
+        if size < 0:
+            size = self.client.cluster.fs.stat(self.path).size - self.pos
+        r = self.client._req("read", self.path, offset=self.pos, size=size)
+        self.pos += size
+        return r.result
+
+    def seek(self, offset: int, whence: int = 0) -> int:
+        if whence == 0:
+            self.pos = offset
+        elif whence == 1:
+            self.pos += offset
+        else:
+            self.pos = self.client.cluster.fs.stat(self.path).size + offset
+        return self.pos
+
+    def close(self):
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class BBClient:
+    """Per-process client: stamps job metadata on every request (§4.1)."""
+
+    def __init__(self, cluster: BBCluster, job: JobMeta, *, autodrain: bool = True):
+        self.cluster = cluster
+        self.job = job
+        self.autodrain = autodrain
+
+    def _req(self, op, path, **kw) -> Request:
+        req = Request(job=self.job, op=op, path=path, **kw)
+        self.cluster.submit(req)
+        if self.autodrain:
+            self.cluster.drain()
+        return req
+
+    def open(self, path: str, mode: str = "r") -> BBFile:
+        return BBFile(self, path, mode)
+
+    def mkdir(self, path: str):
+        self._req("mkdir", path)
+
+    def stat(self, path: str):
+        return self._req("stat", path).result
+
+    def readdir(self, path: str) -> list[str]:
+        return self._req("readdir", path).result
+
+    def unlink(self, path: str):
+        self._req("unlink", path)
+
+    def heartbeat(self, now: float):
+        for srv in self.cluster.servers:
+            srv.heartbeat(self.job, now)

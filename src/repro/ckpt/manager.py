@@ -1,0 +1,162 @@
+"""Checkpointing through the burst buffer: atomic, mesh-agnostic, resumable.
+
+Design points for 1000+-node runs:
+  * two-phase commit — shards are written under ``step_N.tmp/``, the manifest
+    (with per-leaf checksums) is written last, then the directory is renamed;
+    a crash mid-save never corrupts the latest checkpoint.
+  * mesh-agnostic format — every leaf is stored as a full logical array, so a
+    restore may target a different mesh/device-count (elastic rescale); the
+    restore path device_puts each leaf with the *target* sharding.
+  * all I/O goes through a ThemisIO BBClient, so checkpoint traffic is
+    policy-scheduled against competing jobs (the paper's workload).
+
+Storage backends: a BBCluster (primary) or a plain local directory (tests /
+quickstart without the service layer).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> list[tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _unflatten_into(tree, named: dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = named[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, client=None, keep: int = 3):
+        """client: BBClient; None -> local filesystem backend."""
+        self.root = root.rstrip("/")
+        self.client = client
+        self.keep = keep
+        if client is None:
+            os.makedirs(self.root, exist_ok=True)
+        else:
+            try:
+                client.mkdir(self.root)
+            except Exception:
+                pass
+
+    # -- backend ops -----------------------------------------------------------
+    def _write(self, path: str, data: bytes):
+        if self.client is None:
+            with open(path, "wb") as f:
+                f.write(data)
+        else:
+            with self.client.open(path, "w") as f:
+                f.write(data)
+
+    def _read(self, path: str) -> bytes:
+        if self.client is None:
+            with open(path, "rb") as f:
+                return f.read()
+        else:
+            with self.client.open(path) as f:
+                return f.read()
+
+    def _mkdir(self, path: str):
+        if self.client is None:
+            os.makedirs(path, exist_ok=True)
+        else:
+            self.client.mkdir(path)
+
+    def _listdir(self) -> list[str]:
+        if self.client is None:
+            return [os.path.join(self.root, p) for p in os.listdir(self.root)]
+        return self.client.readdir(self.root)
+
+    def _rename_commit(self, tmp: str, final: str, manifest: dict):
+        # our FS has no rename; the manifest at the *final* path is the commit
+        # point — its absence means the tmp dir is garbage.
+        self._write(final, json.dumps(manifest).encode())
+
+    # -- API --------------------------------------------------------------------
+    def save(self, step: int, tree) -> str:
+        tmp = f"{self.root}/step_{step:08d}.tmp"
+        self._mkdir(tmp)
+        manifest = {"step": step, "leaves": {}}
+        for name, arr in _flatten(tree):
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            data = buf.getvalue()
+            digest = hashlib.blake2b(data, digest_size=16).hexdigest()
+            fname = hashlib.blake2b(name.encode(), digest_size=8).hexdigest()
+            self._write(f"{tmp}/{fname}.npy", data)
+            manifest["leaves"][name] = {
+                "file": f"{fname}.npy", "checksum": digest,
+                "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        self._rename_commit(tmp, f"{self.root}/step_{step:08d}.manifest",
+                            manifest)
+        self._gc()
+        return f"{self.root}/step_{step:08d}.manifest"
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for p in self._listdir():
+            base = p.rsplit("/", 1)[-1]
+            if base.endswith(".manifest"):
+                steps.append(int(base[len("step_"):-len(".manifest")]))
+        return max(steps) if steps else None
+
+    def restore(self, like_tree, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``like_tree``; optionally device_put
+        with target shardings (elastic restore onto a different mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint found")
+        manifest = json.loads(self._read(
+            f"{self.root}/step_{step:08d}.manifest").decode())
+        tmp = f"{self.root}/step_{step:08d}.tmp"
+        named = {}
+        for name, info in manifest["leaves"].items():
+            data = self._read(f"{tmp}/{info['file']}")
+            digest = hashlib.blake2b(data, digest_size=16).hexdigest()
+            if digest != info["checksum"]:
+                raise IOError(f"checksum mismatch for {name}")
+            named[name] = np.load(io.BytesIO(data), allow_pickle=False)
+        tree = _unflatten_into(like_tree, named)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, step
+
+    def _gc(self):
+        steps = sorted(s for s in (self.latest_step(),) if s is not None)
+        # keep policy applied lazily: list all manifests
+        all_steps = []
+        for p in self._listdir():
+            base = p.rsplit("/", 1)[-1]
+            if base.endswith(".manifest"):
+                all_steps.append(int(base[len("step_"):-len(".manifest")]))
+        for s in sorted(all_steps)[:-self.keep]:
+            try:
+                if self.client is None:
+                    os.remove(f"{self.root}/step_{s:08d}.manifest")
+                else:
+                    self.client.unlink(f"{self.root}/step_{s:08d}.manifest")
+            except Exception:
+                pass

@@ -1,0 +1,69 @@
+"""Model input specs: ShapeDtypeStruct stand-ins (dry-run) + random batches.
+
+Per the assignment, modality frontends are stubs: musicgen gets precomputed
+EnCodec frame tokens (4 codebooks), llama-vision gets precomputed patch
+embeddings; everything else gets token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import ModelConfig, ShapeSpec
+
+
+def train_input_specs(cfg: ModelConfig, seq: int, batch: int) -> dict:
+    sds = jax.ShapeDtypeStruct
+    specs = {}
+    if cfg.n_codebooks:
+        specs["codes"] = sds((batch, seq, cfg.n_codebooks), jnp.int32)
+        specs["labels"] = sds((batch, seq, cfg.n_codebooks), jnp.int32)
+    else:
+        specs["tokens"] = sds((batch, seq), jnp.int32)
+        specs["labels"] = sds((batch, seq), jnp.int32)
+    if cfg.n_vision_tokens:
+        specs["vision"] = sds((batch, cfg.n_vision_tokens, cfg.vision_dim),
+                              jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int) -> dict:
+    sds = jax.ShapeDtypeStruct
+    specs = {}
+    if cfg.n_codebooks:
+        specs["codes"] = sds((batch, 1, cfg.n_codebooks), jnp.int32)
+    else:
+        specs["tokens"] = sds((batch, 1), jnp.int32)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Specs for the step function the shape lowers (train vs serve)."""
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape.seq_len, shape.global_batch)
+    if shape.kind == "prefill":
+        specs = train_input_specs(cfg, shape.seq_len, shape.global_batch)
+        specs.pop("labels")
+        return specs
+    # decode: one new token against a seq_len cache
+    return decode_input_specs(cfg, shape.global_batch)
+
+
+def random_batch(key, cfg: ModelConfig, seq: int, batch: int,
+                 with_labels: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {}
+    if cfg.n_codebooks:
+        out["codes"] = jax.random.randint(k1, (batch, seq, cfg.n_codebooks), 0, cfg.vocab)
+        if with_labels:
+            out["labels"] = jax.random.randint(k2, (batch, seq, cfg.n_codebooks), 0, cfg.vocab)
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab)
+        if with_labels:
+            out["labels"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab)
+    if cfg.n_vision_tokens:
+        out["vision"] = jax.random.normal(
+            k3, (batch, cfg.n_vision_tokens, cfg.vision_dim), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype))
+    return out

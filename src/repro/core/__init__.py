@@ -1,0 +1,9 @@
+"""ThemisIO core: the paper's contribution (statistical tokens, policies,
+opportunity fairness, lambda-delayed global fairness) plus the simulated
+burst-buffer testbed and the reference schedulers it is compared against."""
+from .policy import Policy, Level, job_fair, size_fair, user_fair, priority_fair
+from .job_table import JobTable, make_table, empty_table, merge_tables
+from .tokens import opportunity_renorm, segments, select_job
+from .global_sync import sinkhorn_balance, sync_segments, local_segments, global_shares
+from .engine import EngineConfig, Workload, make_workload, run
+from . import baselines, metrics

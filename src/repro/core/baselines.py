@@ -1,0 +1,159 @@
+"""Reference schedulers the paper compares against (§5.4): FIFO, GIFT, TBF.
+
+Like the paper — which ported GIFT's BSIP + throttle-and-reward core and
+TBF's HTC + PSSB strategies *into* ThemisIO's substrate — these run inside
+our engine, sharing its queues, workers and measurement plane, so the
+comparison isolates the allocation algorithm.
+
+Modeling notes (recorded per DESIGN.md §2; all constants are calibrated and
+overridable in EngineConfig):
+
+  * GIFT (Patel et al., FAST'20): every μ the coordinator snapshots pending
+    I/O and splits the interval's bytes proportionally (BSIP); a job may not
+    exceed its interval budget even when workers idle (throttling), and a
+    fraction of unserved entitlement is banked as coupons redeemed in later
+    intervals (throttle-and-reward).  Structural effects captured: up-to-μ
+    adaptation delay for newly arriving jobs, budget sawtooth variance,
+    coupon-driven over-allocation after sharing phases.  The pause/resume +
+    synchronous-progress bookkeeping of the BSIP enforcement path is modeled
+    as a fixed per-request control overhead (`gift_ctrl_overhead_s`).
+  * TBF (Qian et al., SC'17): classful token buckets filled at *user-supplied*
+    rates; a request is admitted when its job's bucket covers it.  HTC makes
+    deficit loans hard (bucket goes negative, job blocked until refilled);
+    PSSB distributes spare bandwidth — estimated conservatively from the
+    previous interval with a headroom factor — in proportion to configured
+    rates.  Structural effects captured: static rates cannot track dynamic
+    demand (the paper's core criticism), spare-estimation lag, admission
+    sawtooth.  The rule-engine admission path is a fixed per-request control
+    overhead (`tbf_ctrl_overhead_s`).
+
+ThemisIO's own per-request cost is the statistical token draw, which the
+paper measures at ~1 µs (§5.3.1) — negligible at 10 MB request granularity.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AuxState(NamedTuple):
+    budget: jnp.ndarray      # f32[S, J] GIFT per-interval byte budget
+    coupons: jnp.ndarray     # f32[S, J] GIFT carried reward
+    served: jnp.ndarray      # f32[S, J] bytes served this interval (GIFT+TBF)
+    bucket: jnp.ndarray      # f32[S, J] TBF tokens (bytes; negative under HTC)
+    spare: jnp.ndarray       # f32[S]    TBF spare-bandwidth quota this interval
+
+
+def init_aux(n_servers: int, max_jobs: int) -> AuxState:
+    z = jnp.zeros((n_servers, max_jobs), jnp.float32)
+    return AuxState(budget=z, coupons=z, served=z, bucket=z,
+                    spare=jnp.zeros((n_servers,), jnp.float32))
+
+
+# -- FIFO -------------------------------------------------------------------
+
+def fifo_select(head_time: jnp.ndarray, demand: jnp.ndarray) -> jnp.ndarray:
+    """Earliest queued arrival across jobs; -1 when all queues are empty."""
+    j = jnp.argmin(head_time, axis=-1).astype(jnp.int32)
+    return jnp.where(demand.any(axis=-1), j, -1)
+
+
+# -- GIFT -------------------------------------------------------------------
+
+def gift_interval_update(aux: AuxState, qcount, t, mu_ticks: int, dt: float,
+                         server_bw: float, coupon_frac: float) -> AuxState:
+    """Every μ: BSIP — split the interval's bytes over jobs in proportion to
+    their pending I/O; redeem coupons; bank a fraction of unserved budget."""
+    def update(aux):
+        pending = qcount.astype(jnp.float32)
+        tot = jnp.maximum(pending.sum(axis=1, keepdims=True), 1.0)
+        fair = server_bw * mu_ticks * dt * pending / tot
+        unserved = jnp.maximum(aux.budget, 0.0)
+        redeemed = aux.coupons
+        banked = coupon_frac * unserved * (pending > 0)
+        return aux._replace(
+            budget=fair + redeemed,
+            coupons=banked,
+            served=jnp.zeros_like(aux.served),
+        )
+    return jax.lax.cond(jnp.mod(t, mu_ticks) == 0, update, lambda a: a, aux)
+
+
+def gift_select(aux: AuxState, demand: jnp.ndarray, key) -> jnp.ndarray:
+    """Pick among jobs with demand AND remaining budget, weighted by budget.
+    Throttling: if every demanded job is out of budget, the worker idles —
+    GIFT trades utilization for its fairness window (the paper's critique)."""
+    w = jnp.where(demand & (aux.budget > 0), aux.budget, 0.0)
+    return _weighted_pick(w, key)
+
+
+# -- TBF --------------------------------------------------------------------
+
+def tbf_refill(aux: AuxState, rate: float, dt: float, burst: float) -> AuxState:
+    return aux._replace(bucket=jnp.minimum(aux.bucket + rate * dt, burst))
+
+
+def tbf_interval_update(aux: AuxState, t, mu_ticks: int, dt: float,
+                        server_bw: float, rate: float,
+                        headroom: float) -> AuxState:
+    """Every μ: PSSB — estimate spare bandwidth from the previous interval's
+    guaranteed-rate consumption, discounted by a safety headroom."""
+    def update(aux):
+        cap_bytes = server_bw * mu_ticks * dt
+        guaranteed = jnp.minimum(aux.served, rate * mu_ticks * dt).sum(axis=1)
+        spare = headroom * jnp.maximum(cap_bytes - guaranteed, 0.0)
+        return aux._replace(spare=spare, served=jnp.zeros_like(aux.served))
+    return jax.lax.cond(jnp.mod(t, mu_ticks) == 0, update, lambda a: a, aux)
+
+
+def tbf_select(aux: AuxState, demand: jnp.ndarray, req_bytes, key) -> jnp.ndarray:
+    """Admit jobs whose bucket covers the request (guaranteed rate); else lend
+    from the PSSB spare quota proportionally to configured rates; else idle.
+    HTC: admitted loans drive the bucket negative and block the job."""
+    covered = demand & (aux.bucket >= req_bytes[None, :])
+    w_adm = jnp.where(covered, jnp.maximum(aux.bucket, 1.0), 0.0)
+    any_adm = covered.any(axis=-1)
+    # PSSB path: equal-rate classes -> uniform weights over demanded jobs,
+    # gated by the server's remaining spare quota.
+    spare_open = aux.spare > req_bytes.max()
+    w_spare = jnp.where(demand & spare_open[:, None], 1.0, 0.0)
+    pick_adm = _weighted_pick(w_adm, key)
+    pick_spare = _weighted_pick(w_spare, jax.random.fold_in(key, 1))
+    return jnp.where(any_adm, pick_adm, pick_spare)
+
+
+# -- shared -----------------------------------------------------------------
+
+def charge(scheduler: str, aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
+    """Debit the scheduler's account for a pop of `add_bytes` at (s, j_sel)."""
+    if scheduler == "gift":
+        return aux._replace(
+            budget=aux.budget.at[srv_idx, j_sel].add(-add_bytes),
+            served=aux.served.at[srv_idx, j_sel].add(add_bytes))
+    if scheduler == "tbf":
+        # Guaranteed tokens are consumed first; the remainder draws on the
+        # spare quota (PSSB) while HTC lets the bucket run negative.
+        have = jnp.maximum(aux.bucket[srv_idx, j_sel], 0.0)
+        from_bucket = jnp.minimum(add_bytes, have)
+        from_spare = add_bytes - from_bucket
+        return aux._replace(
+            bucket=aux.bucket.at[srv_idx, j_sel].add(-from_bucket),
+            spare=aux.spare.at[srv_idx].add(-from_spare),
+            served=aux.served.at[srv_idx, j_sel].add(add_bytes))
+    return aux
+
+
+def _weighted_pick(w: jnp.ndarray, key) -> jnp.ndarray:
+    """Weighted categorical per server row; -1 for all-zero rows."""
+    total = w.sum(axis=-1)
+    u = jax.random.uniform(key, (w.shape[0],)) * jnp.maximum(total, 1e-30)
+    cdf = jnp.cumsum(w, axis=-1)
+    idx = jnp.sum((cdf <= u[:, None]).astype(jnp.int32), axis=-1)
+    idx = jnp.clip(idx, 0, w.shape[-1] - 1)
+    # guard roundoff: chosen slot must have weight
+    has = jnp.take_along_axis(w, idx[:, None], axis=-1)[:, 0] > 0
+    first = jnp.argmax((w > 0).astype(jnp.int32), axis=-1).astype(jnp.int32)
+    idx = jnp.where(has, idx, first)
+    return jnp.where(total > 0, idx, -1).astype(jnp.int32)

@@ -1,0 +1,96 @@
+"""The job status table (paper §4.1): fixed-slot struct-of-arrays, jnp-native.
+
+Every I/O request carries job metadata (job id, user id, group id, node
+count, priority); servers accumulate that into a job status table fed to the
+policy engine, and the tables are what λ-sync all-gathers between servers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class JobTable(NamedTuple):
+    """One slot per job. ``active`` marks live slots (heartbeat fresh)."""
+
+    active: jnp.ndarray     # bool[J]
+    user_id: jnp.ndarray    # int32[J]
+    group_id: jnp.ndarray   # int32[J]
+    size: jnp.ndarray       # float32[J]  node count
+    priority: jnp.ndarray   # float32[J]
+    last_heartbeat: jnp.ndarray  # float32[J] seconds
+
+    @property
+    def max_jobs(self) -> int:
+        return self.active.shape[0]
+
+
+def empty_table(max_jobs: int) -> JobTable:
+    z = jnp.zeros((max_jobs,))
+    return JobTable(
+        active=jnp.zeros((max_jobs,), dtype=bool),
+        user_id=jnp.zeros((max_jobs,), dtype=jnp.int32),
+        group_id=jnp.zeros((max_jobs,), dtype=jnp.int32),
+        size=z.astype(jnp.float32),
+        priority=jnp.ones((max_jobs,), dtype=jnp.float32),
+        last_heartbeat=z.astype(jnp.float32),
+    )
+
+
+def make_table(
+    jobs: Sequence[dict],
+    max_jobs: int,
+) -> JobTable:
+    """Build a table from dicts with keys: user, group, size, priority."""
+    if len(jobs) > max_jobs:
+        raise ValueError(f"{len(jobs)} jobs > {max_jobs} slots")
+    active = np.zeros((max_jobs,), dtype=bool)
+    user = np.zeros((max_jobs,), dtype=np.int32)
+    group = np.zeros((max_jobs,), dtype=np.int32)
+    size = np.zeros((max_jobs,), dtype=np.float32)
+    prio = np.ones((max_jobs,), dtype=np.float32)
+    for j, spec in enumerate(jobs):
+        active[j] = True
+        user[j] = spec.get("user", j)
+        group[j] = spec.get("group", 0)
+        size[j] = spec.get("size", 1)
+        prio[j] = spec.get("priority", 1.0)
+    return JobTable(
+        active=jnp.asarray(active),
+        user_id=jnp.asarray(user),
+        group_id=jnp.asarray(group),
+        size=jnp.asarray(size),
+        priority=jnp.asarray(prio),
+        last_heartbeat=jnp.zeros((max_jobs,), dtype=jnp.float32),
+    )
+
+
+def merge_tables(a: JobTable, b: JobTable) -> JobTable:
+    """Union two views of the job table (paper Fig. 5 'exchange the entries').
+
+    Slots are globally indexed, so a union is an elementwise OR on ``active``
+    and a take-newest on the metadata (metadata for a given slot is identical
+    across servers by construction; heartbeats take the max).
+    """
+    take_b = (~a.active) & b.active
+    pick = lambda x, y: jnp.where(take_b, y, x)
+    return JobTable(
+        active=a.active | b.active,
+        user_id=pick(a.user_id, b.user_id),
+        group_id=pick(a.group_id, b.group_id),
+        size=pick(a.size, b.size),
+        priority=pick(a.priority, b.priority),
+        last_heartbeat=jnp.maximum(a.last_heartbeat, b.last_heartbeat),
+    )
+
+
+def expire_stale(table: JobTable, now: float, timeout: float) -> JobTable:
+    """Job monitor rule: no heartbeat for ``timeout`` seconds -> inactive."""
+    fresh = (now - table.last_heartbeat) <= timeout
+    return table._replace(active=table.active & fresh)
+
+
+def heartbeat(table: JobTable, job: int, now) -> JobTable:
+    return table._replace(last_heartbeat=table.last_heartbeat.at[job].set(now))

@@ -1,0 +1,67 @@
+"""Measurement plane: throughput bins -> the paper's reported metrics."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def median_gbps(result, job: int, t0: float, t1: float) -> float:
+    """Median per-bin throughput of a job over [t0, t1) seconds."""
+    g = result["gbps"][job]
+    b0, b1 = int(t0 / result["bin_s"]), int(t1 / result["bin_s"])
+    window = g[b0:b1]
+    return float(np.median(window)) if window.size else 0.0
+
+
+def std_gbps(result, job: int, t0: float, t1: float) -> float:
+    g = result["gbps"][job]
+    b0, b1 = int(t0 / result["bin_s"]), int(t1 / result["bin_s"])
+    window = g[b0:b1]
+    return float(np.std(window)) if window.size else 0.0
+
+
+def total_gbps(result, t0: float, t1: float) -> float:
+    g = result["gbps"].sum(axis=0)
+    b0, b1 = int(t0 / result["bin_s"]), int(t1 / result["bin_s"])
+    window = g[b0:b1]
+    return float(np.median(window)) if window.size else 0.0
+
+
+def share_trace(result, jobs, t0: float = 0.0, t1: float = None) -> np.ndarray:
+    """Per-bin share of total throughput for each job (paper Fig. 14 view)."""
+    g = result["gbps"][list(jobs)]
+    tot = np.maximum(g.sum(axis=0, keepdims=True), 1e-12)
+    tr = g / tot
+    b0 = int(t0 / result["bin_s"])
+    b1 = tr.shape[1] if t1 is None else int(t1 / result["bin_s"])
+    return tr[:, b0:b1]
+
+
+def time_to_fairness(result, jobs, targets, tol: float = 0.1,
+                     t0: float = 0.0) -> float:
+    """First time (s) after t0 when every job's share is within tol of target
+    and stays there for 3 consecutive bins; inf if never."""
+    tr = share_trace(result, jobs)
+    b0 = int(t0 / result["bin_s"])
+    ok = np.all(np.abs(tr - np.asarray(targets)[:, None]) <= tol, axis=0)
+    run = 0
+    for b in range(b0, ok.shape[0]):
+        run = run + 1 if ok[b] else 0
+        if run >= 3:
+            return (b - 2) * result["bin_s"]
+    return float("inf")
+
+
+def completion_time(result, job: int, n_requests: int) -> float:
+    """Time (s) at which the job finished its n-th request (bin resolution)."""
+    per_bin = result["gbps"][job] * result["bin_s"] * 1e9  # bytes per bin
+    cum = np.cumsum(per_bin)
+    # bytes per request from totals
+    done = result["completed"][job]
+    if done == 0:
+        return float("inf")
+    req_b = cum[-1] / done
+    target = n_requests * req_b
+    idx = np.searchsorted(cum, target - 1e-6)
+    if idx >= len(cum):
+        return float("inf")
+    return (idx + 1) * result["bin_s"]

@@ -1,0 +1,67 @@
+"""Statistical tokens: segment tables, opportunity renormalization, worker draws.
+
+The paper's workers draw ``u ~ U[0,1)`` and serve the job whose probability
+segment contains ``u`` (§3).  On TPU/JAX the lock-free queue pop becomes a
+branchless masked weighted choice: mask shares by queue occupancy, renormalize
+(opportunity fairness / token recycling), prefix-sum, and binary-search the
+draw.  ``repro.kernels.token_select`` provides the fused Pallas version of
+:func:`select_job`; this module is the reference used by the engine on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def opportunity_renorm(shares: jnp.ndarray, demand: jnp.ndarray) -> jnp.ndarray:
+    """Recycle tokens of idle jobs: renormalize shares over demanded jobs.
+
+    Flat renormalization — used per-tick between λ-syncs. Hierarchical
+    (within-scope-first) redistribution is obtained by recomputing the policy
+    chain with a demand mask (see :func:`repro.core.policy.compute_job_shares`).
+    """
+    masked = shares * demand.astype(shares.dtype)
+    total = masked.sum(axis=-1, keepdims=True)
+    return jnp.where(total > 0, masked / jnp.maximum(total, 1e-30), 0.0)
+
+
+def segments(shares: jnp.ndarray) -> jnp.ndarray:
+    """Cumulative segment boundaries over [0, 1]; last entry == total mass."""
+    return jnp.cumsum(shares, axis=-1)
+
+
+def select_job(shares: jnp.ndarray, demand: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """One worker token draw: pick the job whose segment contains ``u``.
+
+    shares: f32[..., J] (need not be normalized), demand: bool[..., J],
+    u: f32[...] in [0,1).  Returns int32[...] job index, or -1 when no job has
+    demand (worker idles — opportunity fairness never blocks on idle slots).
+    """
+    probs = opportunity_renorm(shares, demand)
+    # Work conservation: if demand exists but the policy gave it no mass yet
+    # (e.g. a job between syncs), fall back to uniform over demanded jobs —
+    # idle cycles are always reassigned.
+    no_mass = probs.sum(axis=-1, keepdims=True) <= 0
+    probs = jnp.where(no_mass, opportunity_renorm(jnp.ones_like(shares), demand), probs)
+    seg = segments(probs)
+    total = seg[..., -1]
+    # Branchless segment search: count boundaries <= u.
+    idx = jnp.sum((seg <= u[..., None]).astype(jnp.int32), axis=-1)
+    idx = jnp.clip(idx, 0, shares.shape[-1] - 1)
+    # -1 when nothing has demand at all.
+    idx = jnp.where(total > 0, idx, -1)
+    # Guard: ensure the selected slot actually has demand (float roundoff at
+    # segment edges). If not, take the first demanded slot.
+    has = jnp.take_along_axis(demand.astype(jnp.int32), jnp.maximum(idx, 0)[..., None], axis=-1)[..., 0]
+    first_demand = jnp.argmax(demand.astype(jnp.int32), axis=-1).astype(jnp.int32)
+    idx = jnp.where((idx >= 0) & (has == 0), first_demand, idx)
+    return idx.astype(jnp.int32)
+
+
+def draw_uniform(key: jax.Array, shape) -> jnp.ndarray:
+    return jax.random.uniform(key, shape, dtype=jnp.float32)
+
+
+def expected_selection_freq(shares: jnp.ndarray, demand: jnp.ndarray) -> jnp.ndarray:
+    """The stationary pick distribution given persistent demand — test helper."""
+    return opportunity_renorm(shares, demand)

@@ -1,0 +1,120 @@
+"""Sharding rules: map parameter/activation pytrees onto the production mesh.
+
+Mesh axes (launch/mesh.py): ``("pod", "data", "model")`` multi-pod or
+``("data", "model")`` single-pod.  Strategy (baseline; §Perf iterates):
+
+  * parameters — tensor-parallel over ``model`` on the largest weight axis
+    that divides, then FSDP over ``data`` on another dividing axis (for
+    scanned stacks this is usually the layer axis, giving the classic
+    per-layer all-gather inside the scan); small vectors replicate.
+  * activations — batch over ``(pod, data)``; when batch == 1 (long_500k)
+    the KV-cache sequence axis shards over every axis instead.
+  * KV caches — sequence axis over ``model`` (attention against a sharded
+    cache lowers to partial-softmax + psum collectives under GSPMD).
+  * optimizer state — follows its parameter.
+
+All rules are "best effort by divisibility": a dim shards only if its size
+divides the axis size, so every arch in the pool lowers without bespoke
+per-arch specs; per-arch overrides stay possible via ``rules`` kwargs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _divides(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               *, fsdp: bool = True) -> P:
+    """TP over 'model' on the last dividing big axis + FSDP over 'data'."""
+    nm = mesh_axis_size(mesh, "model")
+    nd = mesh_axis_size(mesh, "data")
+    spec: list = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    # prefer sharding the trailing (output-feature) axis over 'model'
+    model_axis = None
+    for ax in reversed(range(len(shape))):
+        if shape[ax] >= nm and _divides(shape[ax], nm) and shape[ax] > 1:
+            model_axis = ax
+            spec[ax] = "model"
+            break
+    if fsdp and nd > 1:
+        # FSDP over 'data': pick the largest remaining dividing axis
+        cands = [ax for ax in range(len(shape))
+                 if ax != model_axis and _divides(shape[ax], nd) and shape[ax] >= nd]
+        if cands:
+            ax = max(cands, key=lambda a: shape[a])
+            spec[ax] = "data"
+    return P(*spec)
+
+
+def params_shardings(params_shapes, mesh: Mesh, *, fsdp: bool = True):
+    """Pytree of NamedShardings matching a pytree of ShapeDtypeStructs."""
+    def one(path, leaf):
+        p = "/".join(str(getattr(k, "key", k)) for k in path)
+        return NamedSharding(mesh, param_spec(p, leaf.shape, mesh, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Data inputs: batch over (pod, data) when it divides, else replicate."""
+    dp = dp_axes(mesh)
+    n = mesh_axis_size(mesh, dp)
+    if len(shape) >= 1 and _divides(shape[0], n):
+        return P(dp)
+    return P()
+
+
+def batch_shardings(batch_shapes, mesh: Mesh):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh)), batch_shapes)
+
+
+def cache_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               batch: int) -> P:
+    """KV caches: [G, B, S, ...]. Batch over dp if divisible; sequence (axis 2)
+    over 'model' (and over everything for batch==1 long-context)."""
+    dp = dp_axes(mesh)
+    ndp = mesh_axis_size(mesh, dp)
+    nm = mesh_axis_size(mesh, "model")
+    spec: list = [None] * len(shape)
+    if len(shape) < 3:
+        return P()
+    if _divides(shape[1], ndp):
+        spec[1] = dp
+    # sequence axis over 'model' only (matches the in-model "kv_seq" rule so
+    # decode never reshards the cache; batch==1 long-context replicates over
+    # dp, which is cheap relative to resharding 500k-token caches per step)
+    if shape[2] > 1 and _divides(shape[2], nm):
+        spec[2] = "model"
+    return P(*spec)
+
+
+def caches_shardings(cache_shapes, mesh: Mesh, batch: int):
+    def one(path, leaf):
+        p = "/".join(str(getattr(k, "key", k)) for k in path)
+        return NamedSharding(mesh, cache_spec(p, leaf.shape, mesh, batch))
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,128 @@
+"""Pallas TPU flash attention: tiled online-softmax, causal + sliding window.
+
+Grid = (B*H, n_q_blocks, n_k_blocks); the innermost grid dimension carries
+the online-softmax state (m, l, acc) in VMEM scratch — initialized at ki==0,
+flushed to the output block at the last visited ki.  Causally dead or
+out-of-window tiles are skipped with ``pl.when`` (the MXU never sees them),
+which is the kernel-level version of the 'tri' schedule in the jnp path.
+
+Block shapes default to (128, 128): MXU-aligned, and the working set per
+grid step (q,k,v tiles + f32 accumulator) is ~0.4 MB at head_dim 128 —
+comfortably inside VMEM with double buffering.
+
+ref.py / repro.models.attention.blocked_attention is the oracle.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, causal: bool, window: int,
+                  scale: float, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = qi * bq
+    k0 = ki * bk
+    # tile liveness: any (q,k) pair with k <= q and q - k < window
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.asarray(k0 <= q0 + bq - 1)
+        if window > 0:
+            live = live & jnp.asarray((q0 - (k0 + bk - 1)) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...][0].astype(jnp.float32) * scale        # [bq, d]
+        k = k_ref[...][0].astype(jnp.float32)                # [bk, d]
+        v = v_ref[...][0].astype(jnp.float32)
+        s = q @ k.T                                           # [bq, bk]
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < seq_k
+        if causal:
+            ok &= (qpos - kpos) >= 0
+        if window > 0:
+            ok &= (qpos - kpos) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_scr[...]
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+                      )[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,          # [B, Sq, H, D]
+    k: jnp.ndarray,          # [B, Sk, Hk, D]
+    v: jnp.ndarray,          # [B, Sk, Hk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    scale = scale if scale is not None else d ** -0.5
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    nq, nk = -(-sq // bq), -(-sk // bk)
+    pq, pk = nq * bq - sq, nk * bk - sk
+    # layout: [B*H, S, D]
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(b * h, sk, d)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(b * h, sk, d)
+    if pq:
+        qh = jnp.pad(qh, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kh = jnp.pad(kh, ((0, 0), (0, pk), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pk), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal, window=window,
+        scale=scale, seq_k=sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq * bq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    return out

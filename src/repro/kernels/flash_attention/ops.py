@@ -1,0 +1,19 @@
+"""jit'd dispatch: Pallas kernel on TPU, jnp flash path elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import blocked_attention
+from .kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, block_q=block_q,
+            block_k=block_k, interpret=jax.default_backend() != "tpu")
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k)

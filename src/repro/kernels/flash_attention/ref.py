@@ -1,0 +1,2 @@
+"""Oracle: repro.models.attention.blocked_attention / dense_attention."""
+from repro.models.attention import blocked_attention, dense_attention  # noqa: F401

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: chunked Mamba-2 SSD scan.
+
+Grid = (B, n_chunks); the inter-chunk state [H, P, N] persists in VMEM
+scratch across the chunk axis.  Differences vs the RWKV-6 kernel: the decay
+is a *scalar per head per step* (not per-channel) and B/C projections are
+shared across heads (Mamba-2's multi-value head structure), so the intra-
+chunk term factors into an [L, L] CB Gram matrix gated by per-head decay
+ratios — MXU-friendly.
+
+ref.py (= repro.models.ssm.ssd_chunked / ssd_reference) is the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    xc = x_ref[...][0].astype(jnp.float32)     # [L, H, P]
+    lac = la_ref[...][0].astype(jnp.float32)   # [L, H] log decay
+    bc = b_ref[...][0].astype(jnp.float32)     # [L, N]
+    cc = c_ref[...][0].astype(jnp.float32)     # [L, N]
+    hprev = h_scr[...]                         # [H, P, N]
+
+    cum = jnp.cumsum(lac, axis=0)              # inclusive prefix [L, H]
+    # intra-chunk: y[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) x_j
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (lj <= li)[:, :, None]               # [L, L, 1]
+    rel = cum[:, None, :] - cum[None, :, :]    # [L, L, H]
+    gate = jnp.exp(jnp.where(tri, rel, -jnp.inf))
+    cb = cc @ bc.T                             # [L, L]
+    y = jnp.einsum("ij,ijh,jhp->ihp", cb, gate, xc)
+    # inter-chunk from carried state
+    y = y + jnp.einsum("in,hpn,ih->ihp", cc, hprev, jnp.exp(cum))
+    # state update
+    tot = jnp.exp(cum[-1])                     # [H]
+    w = jnp.exp(cum[-1][None, :] - cum)        # [L, H]
+    dh = jnp.einsum("jh,jn,jhp->hpn", w, bc, xc)
+    h_scr[...] = hprev * tot[:, None, None] + dh
+    y_ref[...] = y[None].astype(y_ref.dtype)
+
+
+def mamba2_ssd_pallas(x, a, b, c, *, chunk: int = 64, interpret: bool = True):
+    """x: [B,S,H,P] (dt-scaled), a: [B,S,H] decay in (0,1], b,c: [B,S,N].
+    Returns y [B,S,H,P]. S must be a multiple of `chunk`."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    la = jnp.log(jnp.maximum(a, 1e-20))
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, la, b, c)
+    return y

@@ -1,0 +1,17 @@
+"""jit'd dispatch: Pallas SSD kernel on TPU, chunked jnp elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.ssm import ssd_chunked
+from .kernel import mamba2_ssd_pallas
+
+
+def mamba2_ssd(x, a, b, c, *, chunk=64, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return mamba2_ssd_pallas(x, a, b, c, chunk=chunk,
+                                 interpret=jax.default_backend() != "tpu")
+    y, _ = ssd_chunked(x, a, b, c, None, chunk=chunk)
+    return y

@@ -1,0 +1,2 @@
+"""Oracle: repro.models.ssm.ssd_chunked / ssd_reference."""
+from repro.models.ssm import ssd_chunked, ssd_reference  # noqa: F401

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence (data-dependent decay).
+
+Grid = (B*H, n_chunks); the inter-chunk state S [K, V] lives in VMEM scratch
+and persists across the chunk dimension (the innermost grid axis), so the
+whole sequence is processed with one kernel launch and the state never
+round-trips to HBM — the TPU analogue of RWKV's CUDA kernel whose state
+lives in registers/SMEM.
+
+Per chunk (length L):
+  cwe   = exclusive prefix of log-decay                     [L, K]
+  y     = (r·exp(cwe)) @ S                                  inter-chunk
+        + Σ_{j<i} (r_i k_j exp(cwe_i - cwe_j - lw_j)) v_j   intra (per-channel)
+        + (r_i u k_i) v_i                                   bonus diagonal
+  S     = exp(cwl)·S + Σ_j exp(cwl - cwe_j - lw_j) k_j ⊗ v_j
+
+The intra term contracts over K *inside* the exp-weighted product, so it is
+evaluated as an [L, L, K] tile — L=32/64 keeps that in VMEM (L²·K·4B ≈ 1 MB).
+
+ref.py (= repro.models.rwkv.wkv6_chunked / wkv6_reference) is the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_scr, *,
+                 chunk: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[...][0].astype(jnp.float32)      # [L, K]
+    k = k_ref[...][0].astype(jnp.float32)
+    v = v_ref[...][0].astype(jnp.float32)
+    lw = lw_ref[...][0].astype(jnp.float32)
+    u = u_ref[...][0].astype(jnp.float32)      # [1, K] row
+    s_prev = s_scr[...]                        # [K, V]
+
+    cwe = jnp.cumsum(lw, axis=0) - lw          # exclusive prefix [L, K]
+    cwl = cwe[-1] + lw[-1]                     # total [K]
+
+    # inter-chunk
+    y = (r * jnp.exp(cwe)) @ s_prev            # [L, V]
+    # intra-chunk, strictly-lower pairs with per-channel decay
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (lj < li)[:, :, None]                # [L, L, 1]
+    rel = cwe[:, None, :] - (cwe + lw)[None, :, :]   # [L, L, K]
+    gate = jnp.exp(jnp.where(tri, rel, -jnp.inf))
+    att = jnp.einsum("ik,jk,ijk->ij", r, k, gate)
+    y = y + att @ v
+    # bonus diagonal: y_i += (sum_k r_i u k_i) * v_i
+    y = y + jnp.einsum("ik,ik->i", r * u[0], k)[:, None] * v
+    # state update
+    carry = jnp.exp(cwl[None, :] - cwe - lw)   # [L, K]
+    s_scr[...] = s_prev * jnp.exp(cwl)[:, None] + (carry * k).T @ v
+    y_ref[...] = y[None].astype(y_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, lw, u, *, chunk: int = 32, interpret: bool = True):
+    """r,k,v,lw: [B, S, H, K]; u: [H, K]. Returns y [B, S, H, K].
+
+    S must be a multiple of `chunk` (pad upstream; ops.py handles it).
+    """
+    b, s, h, kd = r.shape
+    assert s % chunk == 0
+    nc = s // chunk
+    # layout: [B*H, S, K]
+    def lay(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, kd)
+    rh, kh, vh, lwh = lay(r), lay(k), lay(v), lay(lw)
+    uh = jnp.tile(u, (b, 1)).reshape(b * h, 1, kd)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, nc=nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, kd), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, kd), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, kd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((kd, kd), jnp.float32)],
+        interpret=interpret,
+    )(rh, kh, vh, lwh, uh)
+    return y.reshape(b, h, s, kd).transpose(0, 2, 1, 3)

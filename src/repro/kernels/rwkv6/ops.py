@@ -1,0 +1,17 @@
+"""jit'd dispatch: Pallas WKV6 kernel on TPU, chunked jnp elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.rwkv import wkv6_chunked
+from .kernel import wkv6_pallas
+
+
+def wkv6(r, k, v, lw, u, *, chunk=64, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return wkv6_pallas(r, k, v, lw, u, chunk=chunk,
+                           interpret=jax.default_backend() != "tpu")
+    y, _ = wkv6_chunked(r, k, v, lw, u, chunk=chunk)
+    return y

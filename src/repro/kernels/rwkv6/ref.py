@@ -1,0 +1,2 @@
+"""Oracle: repro.models.rwkv.wkv6_chunked / wkv6_reference."""
+from repro.models.rwkv import wkv6_chunked, wkv6_reference  # noqa: F401

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused statistical-token worker draw (paper §3 hot path).
+
+The paper's I/O worker pops one token at a time: draw u ~ U[0,1), walk the
+job segment table, pop that job's queue.  The lock-free-queue formulation
+does not transfer to TPU (no mutexes, no dynamic queues in VMEM); the
+TPU-native equivalent of the same statistics is a *fused masked weighted
+choice* over a fixed job-slot table:
+
+    mask   = qcount > 0                       (opportunity fairness)
+    w      = shares * mask
+    cdf    = inclusive prefix-sum(w)          (renormalized implicitly by
+    pick   = sum(cdf <= u * cdf[-1])           scaling u by the total mass)
+
+One grid step processes a block of servers; the segment table lives in VMEM
+(jobs padded to the 128-lane width), and all W worker draws for the block are
+answered branchlessly in one pass.  ref.py is the pure-jnp oracle (identical
+math; also what `repro.core.tokens.select_job` uses).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _token_select_kernel(shares_ref, qcount_ref, u_ref, out_ref):
+    shares = shares_ref[...]                         # [BS, J]
+    qcount = qcount_ref[...]                         # [BS, J]
+    u = u_ref[...]                                   # [BS, W]
+    mask = (qcount > 0)
+    w = jnp.where(mask, shares, 0.0)
+    # fall back to uniform-over-demanded when the policy gave no mass yet
+    total = jnp.sum(w, axis=-1, keepdims=True)
+    uniform = jnp.where(mask, 1.0, 0.0)
+    w = jnp.where(total > 0, w, uniform)
+    cdf = jnp.cumsum(w, axis=-1)                     # [BS, J]
+    tot = cdf[:, -1][:, None]                        # [BS, 1]
+    # scaled draw per worker; count boundaries <= u  (branchless search)
+    scaled = u * tot                                  # [BS, W]
+    idx = jnp.sum((cdf[:, None, :] <= scaled[:, :, None]).astype(jnp.int32),
+                  axis=-1)
+    idx = jnp.clip(idx, 0, shares.shape[-1] - 1)
+    # roundoff guard: picked slot must have demand; else first demanded slot
+    picked_ok = jnp.take_along_axis(mask, idx, axis=-1)
+    first = jnp.argmax(mask.astype(jnp.int32), axis=-1).astype(jnp.int32)
+    idx = jnp.where(picked_ok, idx, first[:, None])
+    any_demand = jnp.any(mask, axis=-1, keepdims=True)
+    out_ref[...] = jnp.where(any_demand, idx, -1).astype(jnp.int32)
+
+
+def token_select_pallas(shares: jnp.ndarray, qcount: jnp.ndarray,
+                        u: jnp.ndarray, *, block_servers: int = 8,
+                        interpret: bool = True) -> jnp.ndarray:
+    """shares, qcount: [S, J]; u: [S, W] -> int32 [S, W] (-1 = idle).
+
+    J is padded to the 128-lane width inside; S is blocked over the grid.
+    ``interpret=True`` runs the kernel body on CPU (validation mode); on a
+    real TPU pass interpret=False.
+    """
+    s, j = shares.shape
+    w = u.shape[1]
+    jp = -(-j // 128) * 128
+    sp = -(-s // block_servers) * block_servers
+    shares_p = jnp.zeros((sp, jp), jnp.float32).at[:s, :j].set(shares)
+    qcount_p = jnp.zeros((sp, jp), jnp.int32).at[:s, :j].set(qcount)
+    u_p = jnp.zeros((sp, w), jnp.float32).at[:s].set(u)
+    grid = (sp // block_servers,)
+    out = pl.pallas_call(
+        _token_select_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_servers, jp), lambda i: (i, 0)),
+            pl.BlockSpec((block_servers, jp), lambda i: (i, 0)),
+            pl.BlockSpec((block_servers, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_servers, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, w), jnp.int32),
+        interpret=interpret,
+    )(shares_p, qcount_p, u_p)
+    return out[:s]

@@ -1,0 +1,19 @@
+"""jit'd dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import token_select_pallas
+from .ref import token_select_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def token_select(shares, qcount, u, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return token_select_pallas(shares, qcount, u,
+                                   interpret=jax.default_backend() != "tpu")
+    return token_select_ref(shares, qcount, u)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the token_select kernel (same math as
+repro.core.tokens.select_job, vectorized over workers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_select_ref(shares: jnp.ndarray, qcount: jnp.ndarray,
+                     u: jnp.ndarray) -> jnp.ndarray:
+    """shares, qcount: [S, J]; u: [S, W] -> int32 [S, W] (-1 = idle)."""
+    mask = qcount > 0
+    w = jnp.where(mask, shares, 0.0)
+    total = w.sum(axis=-1, keepdims=True)
+    w = jnp.where(total > 0, w, jnp.where(mask, 1.0, 0.0))
+    cdf = jnp.cumsum(w, axis=-1)
+    tot = cdf[:, -1][:, None]
+    scaled = u * tot
+    idx = jnp.sum((cdf[:, None, :] <= scaled[:, :, None]).astype(jnp.int32), axis=-1)
+    idx = jnp.clip(idx, 0, shares.shape[-1] - 1)
+    picked_ok = jnp.take_along_axis(mask, idx, axis=-1)
+    first = jnp.argmax(mask.astype(jnp.int32), axis=-1).astype(jnp.int32)
+    idx = jnp.where(picked_ok, idx, first[:, None])
+    any_demand = mask.any(axis=-1, keepdims=True)
+    return jnp.where(any_demand, idx, -1).astype(jnp.int32)

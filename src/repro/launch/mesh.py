@@ -1,0 +1,18 @@
+"""Production mesh: one v5e pod = 16x16 = 256 chips, multi-pod adds a 'pod'
+axis (2 pods = 512 chips).  A function (not a module constant) so importing
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before first jax init while tests/benches see 1 CPU device."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for multi-device CPU tests (XLA_FLAGS device count >= 4)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

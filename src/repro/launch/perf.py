@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (see dryrun.py)
+
+"""§Perf hillclimb driver: re-lower a cell with config overrides, diff terms.
+
+    python -m repro.launch.perf --arch mixtral-8x7b --shape train_4k \
+        --tag tri --override '{"attn_schedule": "tri"}'
+
+Writes reports/perf/<cell>__<tag>.json and prints the delta vs the latest
+baseline for the same cell.
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import run_cell
+
+REPORTS = Path(__file__).resolve().parents[3] / "reports"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--override", default="{}")
+    ap.add_argument("--baseline", default="",
+                    help="perf tag to diff against (default: dryrun baseline)")
+    args = ap.parse_args()
+
+    overrides = json.loads(args.override)
+    rep = run_cell(args.arch, args.shape, args.mesh, overrides, args.tag)
+    out = REPORTS / "perf"
+    out.mkdir(parents=True, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json"
+    (out / name).write_text(json.dumps(rep, indent=1))
+
+    if args.baseline:
+        base_path = out / f"{args.arch}__{args.shape}__{args.mesh}__{args.baseline}.json"
+    else:
+        base_path = REPORTS / "dryrun" / f"{args.arch}__{args.shape}__{args.mesh}.json"
+    base = json.loads(base_path.read_text()) if base_path.exists() else None
+
+    def fmt(r):
+        return (f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+                f"collective={r['collective_s']:.3f}s bneck={r['bottleneck']} "
+                f"roofline={r['roofline_fraction']*100:.2f}% "
+                f"useful={r['useful_flops_ratio']:.2f}")
+
+    print(f"[{args.tag}] {fmt(rep)}")
+    if base:
+        print(f"[base ] {fmt(base)}")
+        for k in ("compute_s", "memory_s", "collective_s"):
+            b, n = base[k], rep[k]
+            if b > 0:
+                print(f"  {k}: {b:.3f} -> {n:.3f}  ({(n/b-1)*100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

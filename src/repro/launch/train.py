@@ -1,0 +1,53 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+        --steps 200 --seq 128 --batch 8 [--full]
+
+Reduced configs run on CPU; full configs are for real accelerator fleets
+(same code path — the dry-run proves they lower on the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, DataLoader
+from repro.ckpt.manager import CheckpointManager
+from repro.train import optimizer as O
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (needs a real fleet)")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    cfg = dataclasses.replace(cfg, loss_chunk=min(cfg.loss_chunk, args.seq))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      batch_size=args.batch,
+                      shard_tokens=max(1 << 16, args.batch * (args.seq + 1) * 8))
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    trainer = Trainer(
+        cfg,
+        O.OptConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_every=50, log_every=10),
+        DataLoader(dcfg), ckpt=ckpt)
+    trainer.init_or_restore()
+    hist = trainer.run()
+    for h in hist[:: max(1, len(hist) // 10)]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} {h['dt']*1e3:7.1f} ms")
+    print(f"final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

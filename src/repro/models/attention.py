@@ -1,0 +1,503 @@
+"""Attention: blocked (flash-style) training/prefill paths + cached decode.
+
+Variants covered (per assigned architectures):
+  * GQA with optional qk-norm (qwen3, qwen3-moe, h2o-danube, gemma3, zamba2,
+    mixtral, musicgen [MHA = kv==heads], llama-3.2-vision)
+  * sliding-window attention via block masks (h2o-danube, mixtral,
+    gemma3 local layers)
+  * MLA — multi-head latent attention with a compressed KV cache and the
+    absorbed decode path (minicpm3)
+  * cross-attention to stub vision embeddings (llama-3.2-vision)
+
+The training path is blocked over q/kv tiles with an online softmax so the
+S×S score matrix is never materialized (required to fit prefill_32k); it is
+also the pure-jnp oracle for ``repro.kernels.flash_attention``.  Two block
+schedules are provided:
+  * ``masked``  — rectangular q×kv tile grid; causally dead tiles are masked
+    but still computed (baseline).
+  * ``tri``     — only tiles intersecting the causal band/window are visited
+    (a static triangular schedule), halving attention FLOPs at 4k and doing
+    ~S/window less work for sliding-window layers (§Perf optimization).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import override_rules, shard_act
+from .layers import apply_rope, linear, linear_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# -- parameter init -----------------------------------------------------------
+
+def attn_init(key, cfg, dtype, *, cross: bool = False, kv_dim: int | None = None) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    kv_in = kv_dim if kv_dim is not None else d
+    p = {
+        "wq": linear_init(kq, d, h * hd, dtype),
+        "wk": linear_init(kk, kv_in, hk * hd, dtype),
+        "wv": linear_init(kv, kv_in, hk * hd, dtype),
+        "wo": linear_init(ko, h * hd, d, dtype, scale=(h * hd) ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(hd, dtype)
+        p["knorm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def mla_init(key, cfg, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(key, 8)
+    qd = m["q_lora"]
+    return {
+        "wdq": linear_init(keys[0], d, qd, dtype),
+        "qnorm": rmsnorm_init(qd, dtype),
+        "wuq": linear_init(keys[1], qd, h * (m["nope"] + m["rope"]), dtype),
+        "wdkv": linear_init(keys[2], d, m["kv_lora"], dtype),
+        "kvnorm": rmsnorm_init(m["kv_lora"], dtype),
+        "wukv": linear_init(keys[3], m["kv_lora"], h * (m["nope"] + m["v"]), dtype),
+        "wkr": linear_init(keys[4], d, m["rope"], dtype),
+        "wo": linear_init(keys[5], h * m["v"], d, dtype,
+                          scale=(h * m["v"]) ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _expand_kv(x, rep: int, axis: int):
+    """Repeat KV heads rep times along `axis` via broadcast+reshape (GQA).
+    SPMD-friendly: take lowers to a gather whose backward scatter-add
+    reshards poorly under GSPMD."""
+    if rep == 1:
+        return x
+    shape = list(x.shape)
+    x = jnp.expand_dims(x, axis + 1)
+    target = shape[:axis + 1] + [rep] + shape[axis + 1:]
+    x = jnp.broadcast_to(x, target)
+    shape[axis] *= rep
+    return x.reshape(shape)
+
+
+# -- core blocked attention ----------------------------------------------------
+
+def _tile_mask(q0, k0, bq, bk, *, causal, window, q_offset):
+    """Additive mask for a (bq, bk) tile with absolute positions."""
+    qi = q0 + jnp.arange(bq) + q_offset
+    ki = k0 + jnp.arange(bk)
+    rel = qi[:, None] - ki[None, :]
+    ok = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def blocked_attention(
+    q: jnp.ndarray,              # [B, Sq, H, D]
+    k: jnp.ndarray,              # [B, Sk, Hk, D]
+    v: jnp.ndarray,              # [B, Sk, Hk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,             # sliding window (0 = unbounded)
+    q_offset: int = 0,           # absolute position of q[0] relative to k[0]
+    block_q: int = 512,
+    block_k: int = 512,
+    schedule: str = "masked",    # masked | tri
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Flash attention in pure jnp: tiled online-softmax forward + custom-VJP
+    backward that *recomputes* score tiles.  Plain AD through the tile scan
+    would save every S_q x S_k probability tile for the backward pass
+    (~29 GB/device at train_4k — measured, does not fit HBM; see
+    EXPERIMENTS.md §Perf), so the VJP stores only (q, k, v, out, m, l).
+    Also the oracle for repro.kernels.flash_attention."""
+    fn = _blocked_attention_vjp(causal, window, q_offset, block_q, block_k,
+                                schedule,
+                                None if scale is None else float(scale))
+    return fn(q, k, v)
+
+
+@functools.lru_cache(maxsize=None)
+def _blocked_attention_vjp(causal, window, q_offset, block_q, block_k,
+                           schedule, scale):
+    kw = dict(causal=causal, window=window, q_offset=q_offset,
+              block_q=block_q, block_k=block_k, schedule=schedule, scale=scale)
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return _flash_fwd(q, k, v, **kw)[0]
+
+    def fwd_rule(q, k, v):
+        out, (m, l) = _flash_fwd(q, k, v, **kw)
+        return out, (q, k, v, out, m, l)
+
+    def bwd_rule(res, dout):
+        return _flash_bwd(*res, dout, **kw)
+
+    fn.defvjp(fwd_rule, bwd_rule)
+    return fn
+
+
+def _flash_dims(q, k, block_q, block_k):
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    nq, nk = -(-sq // bq), -(-sk // bk)
+    return b, sq, h, d, sk, hk, bq, bk, nq, nk
+
+
+def _flash_layout(q, k, v, bq, bk, nq, nk):
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    if nq * bq - sq:
+        q = jnp.pad(q, ((0, 0), (0, nq * bq - sq), (0, 0), (0, 0)))
+    if nk * bk - sk:
+        k = jnp.pad(k, ((0, 0), (0, nk * bk - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, nk * bk - sk), (0, 0), (0, 0)))
+    qb = shard_act(q.reshape(b, nq, bq, h, d).transpose(0, 3, 1, 2, 4),
+                   "attn_batch", "heads", None, None, None)
+    kb = shard_act(k.reshape(b, nk, bk, hk, d).transpose(0, 3, 1, 2, 4),
+                   "attn_batch", "kv_heads", None, None, None)
+    vb = shard_act(v.reshape(b, nk, bk, hk, d).transpose(0, 3, 1, 2, 4),
+                   "attn_batch", "kv_heads", None, None, None)
+    return qb, kb, vb
+
+
+def _tile_pairs(schedule, causal, window, q_offset, bq, bk, nq, nk):
+    """Static tile visit list, ki-ascending per qi."""
+    if schedule == "tri" and causal:
+        wblocks = nk if window <= 0 else min(nk, window // bk + 2)
+        pairs = [(qi, ki) for qi in range(nq)
+                 for ki in range(max(0, qi + (q_offset // bk) - wblocks + 1),
+                                 min(nk, qi + q_offset // bk + 2))]
+    else:
+        pairs = [(qi, ki) for qi in range(nq) for ki in range(nk)]
+    return jnp.asarray(pairs, dtype=jnp.int32)
+
+
+def _tile_scores(qt, kt, qi, ki, bq, bk, sk, causal, window, q_offset, scale):
+    s = jnp.einsum("bhqd,bhkd->bhqk", qt.astype(jnp.float32) * scale,
+                   kt.astype(jnp.float32))
+    qpos = qi * bq + jnp.arange(bq) + q_offset
+    kpos = ki * bk + jnp.arange(bk)
+    rel = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    ok &= (kpos < sk)[None, :]  # kv padding
+    return s + jnp.where(ok, 0.0, NEG_INF)[None, None]
+
+
+def _flash_fwd(q, k, v, *, causal, window, q_offset, block_q, block_k,
+               schedule, scale):
+    b, sq, h, d, sk, hk, bq, bk, nq, nk = _flash_dims(q, k, block_q, block_k)
+    rep = h // hk
+    scale = scale if scale is not None else d ** -0.5
+    qb, kb, vb = _flash_layout(q, k, v, bq, bk, nq, nk)
+    pairs = _tile_pairs(schedule, causal, window, q_offset, bq, bk, nq, nk)
+
+    acc = shard_act(jnp.zeros((b, h, nq, bq, d), jnp.float32),
+                    "attn_batch", "heads", None, None, None)
+    m = shard_act(jnp.full((b, h, nq, bq), NEG_INF, jnp.float32),
+                  "attn_batch", "heads", None, None)
+    l = shard_act(jnp.zeros((b, h, nq, bq), jnp.float32),
+                  "attn_batch", "heads", None, None)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair[0], pair[1]
+        qt = jax.lax.dynamic_index_in_dim(qb, qi, axis=2, keepdims=False)
+        kt = _expand_kv(jax.lax.dynamic_index_in_dim(kb, ki, axis=2, keepdims=False), rep, axis=1)
+        vt = _expand_kv(jax.lax.dynamic_index_in_dim(vb, ki, axis=2, keepdims=False), rep, axis=1)
+        s = _tile_scores(qt, kt, qi, ki, bq, bk, sk, causal, window, q_offset, scale)
+        mt = jax.lax.dynamic_index_in_dim(m, qi, axis=2, keepdims=False)
+        lt = jax.lax.dynamic_index_in_dim(l, qi, axis=2, keepdims=False)
+        at = jax.lax.dynamic_index_in_dim(acc, qi, axis=2, keepdims=False)
+        m_new = jnp.maximum(mt, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mt - m_new)
+        l_new = lt * corr + p.sum(axis=-1)
+        a_new = at * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vt.astype(jnp.float32))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, axis=2)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, axis=2)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, axis=2)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), pairs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 2, 3, 1, 4).reshape(b, nq * bq, h, d)
+    return out[:, :sq].astype(q.dtype), (m, l)
+
+
+def _flash_bwd(q, k, v, out, m, l, dout, *, causal, window, q_offset,
+               block_q, block_k, schedule, scale):
+    """Tile-recompute backward: stores no S_q x S_k residuals."""
+    b, sq, h, d, sk, hk, bq, bk, nq, nk = _flash_dims(q, k, block_q, block_k)
+    rep = h // hk
+    scale_v = scale if scale is not None else d ** -0.5
+    qb, kb, vb = _flash_layout(q, k, v, bq, bk, nq, nk)
+    # dout/out to blocked layout
+    pad_q = nq * bq - sq
+    if pad_q:
+        dout = jnp.pad(dout, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        out = jnp.pad(out, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    dob = dout.reshape(b, nq, bq, h, d).transpose(0, 3, 1, 2, 4).astype(jnp.float32)
+    ob = out.reshape(b, nq, bq, h, d).transpose(0, 3, 1, 2, 4).astype(jnp.float32)
+    delta = (dob * ob).sum(axis=-1)                    # [B,H,nq,bq]
+    pairs = _tile_pairs(schedule, causal, window, q_offset, bq, bk, nq, nk)
+
+    dq = jnp.zeros((b, h, nq, bq, d), jnp.float32)
+    dk = jnp.zeros((b, hk, nk, bk, d), jnp.float32)
+    dv = jnp.zeros((b, hk, nk, bk, d), jnp.float32)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        qi, ki = pair[0], pair[1]
+        qt = jax.lax.dynamic_index_in_dim(qb, qi, axis=2, keepdims=False)
+        kt = _expand_kv(jax.lax.dynamic_index_in_dim(kb, ki, axis=2, keepdims=False), rep, axis=1)
+        vt = _expand_kv(jax.lax.dynamic_index_in_dim(vb, ki, axis=2, keepdims=False), rep, axis=1)
+        s = _tile_scores(qt, kt, qi, ki, bq, bk, sk, causal, window, q_offset, scale_v)
+        mt = jax.lax.dynamic_index_in_dim(m, qi, axis=2, keepdims=False)
+        lt = jax.lax.dynamic_index_in_dim(l, qi, axis=2, keepdims=False)
+        p = jnp.exp(s - mt[..., None]) / jnp.maximum(lt, 1e-30)[..., None]
+        dot = jax.lax.dynamic_index_in_dim(dob, qi, axis=2, keepdims=False)
+        dlt = jax.lax.dynamic_index_in_dim(delta, qi, axis=2, keepdims=False)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dot, vt.astype(jnp.float32))
+        ds = p * (dp - dlt[..., None])
+        dq_t = jnp.einsum("bhqk,bhkd->bhqd", ds, kt.astype(jnp.float32)) * scale_v
+        dk_t = jnp.einsum("bhqk,bhqd->bhkd", ds, qt.astype(jnp.float32)) * scale_v
+        dv_t = jnp.einsum("bhqk,bhqd->bhkd", p, dot)
+        # reduce expanded heads back to kv heads (GQA)
+        dk_t = dk_t.reshape(b, hk, rep, bk, d).sum(axis=2)
+        dv_t = dv_t.reshape(b, hk, rep, bk, d).sum(axis=2)
+        dq = dq.at[:, :, qi].add(dq_t)
+        dk = dk.at[:, :, ki].add(dk_t)
+        dv = dv.at[:, :, ki].add(dv_t)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq, dk, dv), pairs)
+    dq = dq.transpose(0, 2, 3, 1, 4).reshape(b, nq * bq, h, d)[:, :sq]
+    dk = dk.transpose(0, 2, 3, 1, 4).reshape(b, nk * bk, hk, d)[:, :sk]
+    dv = dv.transpose(0, 2, 3, 1, 4).reshape(b, nk * bk, hk, d)[:, :sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+
+
+def dense_attention(q, k, v, *, causal=True, window=0, q_offset=0, scale=None,
+                    kv_len: jnp.ndarray | None = None):
+    """Unblocked reference / decode path. q: [B,Sq,H,D], k/v: [B,Sk,Hk,D].
+
+    ``kv_len`` masks positions >= kv_len (for partially filled caches).
+    """
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    rep = h // hk
+    scale = scale if scale is not None else d ** -0.5
+    kk = _expand_kv(k, rep, axis=2)
+    vv = _expand_kv(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kk.astype(jnp.float32))
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    rel = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones(rel.shape, dtype=bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    mask = jnp.where(ok, 0.0, NEG_INF)[None, None]
+    if kv_len is not None:
+        mask = mask + jnp.where(kpos[None, None, None, :] < kv_len.reshape(-1, 1, 1, 1), 0.0, NEG_INF)
+    p = jax.nn.softmax(s + mask, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# -- GQA block forward ---------------------------------------------------------
+
+def gqa_project(params, cfg, x, positions, *, theta, kv_src=None, rope=True):
+    """Project to q, k, v heads (with qk-norm + rope)."""
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_src is None else kv_src
+    q = linear(params["wq"], x).reshape(b, s, h, hd)
+    k = linear(params["wk"], src).reshape(b, src.shape[1], hk, hd)
+    v = linear(params["wv"], src).reshape(b, src.shape[1], hk, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q)
+        k = rmsnorm(params["knorm"], k)
+    if rope:
+        q = apply_rope(q, positions, theta)
+        kpos = positions if kv_src is None else jnp.arange(src.shape[1])[None, :]
+        k = apply_rope(k, kpos, theta)
+    q = shard_act(q, "batch", "seq", "heads", None)
+    k = shard_act(k, "batch", "seq", "kv_heads", None)
+    v = shard_act(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def gqa_forward(params, cfg, x, positions, *, causal=True, window=0, theta=1e4,
+                schedule="masked", block_q=512, block_k=512, return_kv=False):
+    q, k, v = gqa_project(params, cfg, x, positions, theta=theta)
+    if x.shape[1] <= block_q:
+        o = dense_attention(q, k, v, causal=causal, window=window)
+    else:
+        o = blocked_attention(q, k, v, causal=causal, window=window,
+                              schedule=schedule, block_q=block_q, block_k=block_k)
+    b, s = x.shape[:2]
+    y = linear(params["wo"], o.reshape(b, s, -1))
+    return (y, (k, v)) if return_kv else y
+
+
+def gqa_decode(params, cfg, x, cache_k, cache_v, pos, *, window=0, theta=1e4):
+    """One-token decode against a (possibly ring-buffer) KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, C, Hk, D]; pos: [B] absolute position.
+    Returns (y, new_k, new_v). For SWA layers the cache length C == window and
+    indexing is mod-C (ring buffer); otherwise C >= max positions.
+    """
+    b = x.shape[0]
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    c = cache_k.shape[1]
+    q = linear(params["wq"], x).reshape(b, 1, h, hd)
+    k = linear(params["wk"], x).reshape(b, 1, hk, hd)
+    v = linear(params["wv"], x).reshape(b, 1, hk, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q)
+        k = rmsnorm(params["knorm"], k)
+    q = apply_rope(q, pos[:, None], theta)
+    k = apply_rope(k, pos[:, None], theta)
+    slot = jnp.mod(pos, c) if window > 0 else pos
+    bi = jnp.arange(b)
+    cache_k = shard_act(cache_k.at[bi, slot].set(k[:, 0]),
+                        "batch", "kv_seq", None, None)
+    cache_v = shard_act(cache_v.at[bi, slot].set(v[:, 0]),
+                        "batch", "kv_seq", None, None)
+    # positions of cache slots for masking
+    kpos = jnp.arange(c)[None, :]
+    if window > 0:
+        # ring buffer: slot holds position p iff p = pos - ((slot_cur - slot) mod C)
+        kp = pos[:, None] - jnp.mod(slot[:, None] - kpos, c)
+        valid = kp >= 0
+    else:
+        kp = kpos
+        valid = kpos <= pos[:, None]
+    rep = h // hk
+    # Grouped-query decode attention in the *sequence-sharded* regime
+    # (§Perf decode iteration 1): the KV cache stays sharded on its sequence
+    # axis; q is tiny and replicated; scores/probs inherit the seq sharding,
+    # so the only collectives are the softmax max/sum and the output psum
+    # (bytes ~ B*H, not the cache).  Expanding KV to all query heads — the
+    # naive path — made GSPMD reshard the whole cache every layer (measured:
+    # 558 GB/step of cache converts + 146 GB of all-gathers on qwen3-32b
+    # decode_32k).
+    q4 = (q.reshape(b, hk, rep, hd) * hd ** -0.5).astype(cache_k.dtype)
+    # bf16 operands + f32 accumulation via preferred_element_type: never
+    # materialize an f32 copy of the cache (§Perf decode iteration 3)
+    s = jnp.einsum("bkrd,bskd->bkrs", q4, cache_k,
+                   preferred_element_type=jnp.float32)
+    s = shard_act(s, "batch", None, None, "kv_seq")
+    s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    o = jnp.einsum("bkrs,bskd->bkrd", p, cache_v,
+                   preferred_element_type=jnp.float32)
+    y = linear(params["wo"], o.reshape(b, 1, h * hd).astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+# -- MLA ------------------------------------------------------------------------
+
+def mla_forward(params, cfg, x, positions, *, return_cache=False, schedule="masked"):
+    """Training/prefill MLA: expand latent, run standard attention."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m["nope"], m["rope"], m["v"]
+    cq = rmsnorm(params["qnorm"], linear(params["wdq"], x))
+    q = linear(params["wuq"], cq).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = rmsnorm(params["kvnorm"], linear(params["wdkv"], x))       # [B,S,kv_lora]
+    kv = linear(params["wukv"], ckv).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_rope = apply_rope(linear(params["wkr"], x).reshape(b, s, 1, dr), positions,
+                        cfg.rope_theta)
+    k_rope_h = jnp.broadcast_to(k_rope, (b, s, h, dr))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = (dn + dr) ** -0.5
+    if s <= 512:
+        o = dense_attention(q_full, k_full, _pad_v(v, dn + dr), causal=True, scale=scale)
+    else:
+        # MLA's 40 heads do not divide the 16-way model axis; left alone,
+        # GSPMD replicates heads and every chip does 40/40 of the quadratic
+        # attention (measured 16x waste, EXPERIMENTS.md §Perf prefill iter 1).
+        # Fold heads into the attention batch: (B*H) shards over the WHOLE
+        # mesh (dp x model), each chip handling B*H/256 head-slices.
+        vp = _pad_v(v, dn + dr)
+        def fold(t):
+            return t.transpose(0, 2, 1, 3).reshape(b * h, s, 1, dn + dr)
+        with override_rules(attn_batch=("pod", "data", "model")):
+            qf = shard_act(fold(q_full), "attn_batch", None, None, None)
+            kf = shard_act(fold(k_full), "attn_batch", None, None, None)
+            vf = shard_act(fold(vp), "attn_batch", None, None, None)
+            of = blocked_attention(qf, kf, vf, causal=True, scale=scale,
+                                   schedule=schedule)
+        o = of.reshape(b, h, s, dn + dr).transpose(0, 2, 1, 3)
+    o = o[..., :dv]
+    y = linear(params["wo"], o.reshape(b, s, -1))
+    if return_cache:
+        return y, (ckv, k_rope[:, :, 0, :])
+    return y
+
+
+def _pad_v(v, d_target):
+    pad = d_target - v.shape[-1]
+    return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
+
+
+def mla_decode(params, cfg, x, cache_ckv, cache_kr, pos):
+    """Absorbed-matmul decode: attention runs in the latent space, so the KV
+    cache is just (kv_lora + rope) floats per position (MLA's point)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = m["nope"], m["rope"], m["v"]
+    kv_l = m["kv_lora"]
+    cq = rmsnorm(params["qnorm"], linear(params["wdq"], x))
+    q = linear(params["wuq"], cq).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    # absorb W_uk into q: q_eff [B,H,kv_lora]
+    wuk = params["wukv"]["w"].reshape(kv_l, h, dn + dv)[:, :, :dn]       # [kv_l,H,dn]
+    q_eff = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    ckv_t = rmsnorm(params["kvnorm"], linear(params["wdkv"], x))[:, 0]   # [B,kv_l]
+    kr_t = apply_rope(linear(params["wkr"], x).reshape(b, 1, 1, dr),
+                      pos[:, None], cfg.rope_theta)[:, 0, 0]             # [B,dr]
+    bi = jnp.arange(b)
+    cache_ckv = shard_act(cache_ckv.at[bi, pos].set(ckv_t), "batch", "kv_seq", None)
+    cache_kr = shard_act(cache_kr.at[bi, pos].set(kr_t), "batch", "kv_seq", None)
+    kpos = jnp.arange(cache_ckv.shape[1])[None, :]
+    valid = kpos <= pos[:, None]
+    scale = (dn + dr) ** -0.5
+    s_nope = jnp.einsum("bhl,bsl->bhs", q_eff, cache_ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        cache_kr.astype(jnp.float32))
+    s = (s_nope + s_rope) * scale + jnp.where(valid, 0.0, NEG_INF)[:, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", p, cache_ckv.astype(jnp.float32))  # [B,H,kv_l]
+    wuv = params["wukv"]["w"].reshape(kv_l, h, dn + dv)[:, :, dn:]        # [kv_l,H,dv]
+    o = jnp.einsum("bhl,lhd->bhd", o_lat, wuv.astype(jnp.float32))
+    y = linear(params["wo"], o.reshape(b, 1, -1).astype(x.dtype))
+    return y, cache_ckv, cache_kr

@@ -1,0 +1,126 @@
+"""Shared neural-net layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-functional: every layer is (init, apply) over explicit param pytrees so
+stacks of layers can be scanned with ``jax.lax.scan`` and sharded with pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.annotate import shard_act
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# -- norms --------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype) -> dict:
+    return rmsnorm_init(d, dtype) if kind == "rms" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rms" else layernorm(params, x)
+
+
+# -- rotary -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D] (or [..., 1, H, D] for decode), positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                            # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- linear / MLP --------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, dtype, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": _normal(key, (d_in, d_out), scale, dtype)}
+
+
+def linear(params, x):
+    return x @ params["w"]
+
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype, out_scale=None) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": linear_init(k3, d_ff, d, dtype, scale=out_scale)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = linear_init(k1, d, d_ff, dtype)
+        p["up"] = linear_init(k2, d, d_ff, dtype)
+    else:  # plain gelu / relu
+        p["up"] = linear_init(k2, d, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(linear(params["gate"], x)) * linear(params["up"], x)
+    elif act == "geglu":
+        h = jax.nn.gelu(linear(params["gate"], x)) * linear(params["up"], x)
+    elif act == "gelu":
+        h = jax.nn.gelu(linear(params["up"], x))
+    else:
+        h = jax.nn.relu(linear(params["up"], x))
+    h = shard_act(h, "batch", "seq", "ff")
+    return linear(params["down"], h)
+
+
+def embedding_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": _normal(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params, x):
+    """Tied or untied output head: x [..., d] @ table.T -> logits."""
+    return x @ params["table"].T.astype(x.dtype)

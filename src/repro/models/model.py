@@ -1,0 +1,562 @@
+"""Composable decoder LM covering all 10 assigned architectures.
+
+The stack is ``cfg.pattern``: segments of ``(repeat, (block_kind, ...))``,
+each lowered to a ``lax.scan`` over stacked per-group parameters, so a
+64-layer model compiles to the HLO of one group.  Heterogeneous stacks
+(gemma3 5:1 local:global, zamba2 mamba+shared-attn, llama-vision cross-attn
+every 5th) are groups with mixed kinds.
+
+Entry points:
+  * ``init_params(key, cfg)``                                — full pytree
+  * ``forward_hidden(params, cfg, batch)``                   — [B,S,d]
+  * ``loss_fn(params, cfg, batch)``                          — scalar + metrics
+  * ``init_caches(cfg, batch, max_len)``                     — decode state
+  * ``prefill(params, cfg, batch, max_len)``                 — logits, caches
+  * ``decode_step(params, cfg, caches, tokens, pos)``        — logits, caches
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.annotate import shard_act
+from . import attention as A
+from . import moe as MOE
+from . import rwkv as RW
+from . import ssm as SSM
+from .layers import (embed, embedding_init, linear, linear_init, mlp, mlp_init,
+                     norm_apply, norm_init, sinusoidal_positions)
+
+NEG_INF = -1e30
+
+
+def _dt(cfg, which="param"):
+    return jnp.dtype(cfg.param_dtype if which == "param" else cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(kind: str, key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    if kind in ("attn", "local", "global"):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"ln1": norm_init(cfg.norm, d, dtype),
+                "attn": A.attn_init(k1, cfg, dtype),
+                "ln2": norm_init(cfg.norm, d, dtype),
+                "mlp": mlp_init(k2, d, cfg.d_ff, cfg.act, dtype,
+                                out_scale=cfg.d_ff ** -0.5 / math.sqrt(2 * cfg.n_layers))}
+    if kind == "attn_moe":
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init(cfg.norm, d, dtype),
+                "attn": A.attn_init(k1, cfg, dtype),
+                "ln2": norm_init(cfg.norm, d, dtype),
+                "moe": MOE.moe_init(k2, cfg, dtype)}
+    if kind == "mamba":
+        return {"ln1": norm_init(cfg.norm, d, dtype),
+                "mamba": SSM.mamba2_init(key, cfg, dtype)}
+    if kind == "rwkv":
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init("ln", d, dtype),
+                "tm": RW.rwkv6_init(k1, cfg, dtype),
+                "ln2": norm_init("ln", d, dtype),
+                "cm": RW.channelmix_init(k2, cfg, dtype)}
+    if kind == "cross":
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init(cfg.norm, d, dtype),
+                "attn": A.attn_init(k1, cfg, dtype, cross=True, kv_dim=cfg.vision_dim),
+                "ln2": norm_init(cfg.norm, d, dtype),
+                "mlp": mlp_init(k2, d, cfg.d_ff, cfg.act, dtype),
+                "gate": jnp.zeros((1,), dtype)}
+    if kind == "mla":
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init(cfg.norm, d, dtype),
+                "attn": A.mla_init(k1, cfg, dtype),
+                "ln2": norm_init(cfg.norm, d, dtype),
+                "mlp": mlp_init(k2, d, cfg.d_ff, cfg.act, dtype)}
+    if kind == "shared_attn":
+        return {}  # parameters live in params["shared"]
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _shared_attn_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    k0, k1, k2 = jax.random.split(key, 3)
+    return {"in_proj": linear_init(k0, 2 * d, d, dtype),
+            "ln1": norm_init(cfg.norm, d, dtype),
+            "attn": A.attn_init(k1, cfg, dtype),
+            "ln2": norm_init(cfg.norm, d, dtype),
+            "mlp": mlp_init(k2, d, cfg.d_ff, cfg.act, dtype)}
+
+
+def init_params(key, cfg) -> dict:
+    pdt = _dt(cfg, "param")
+    keys = jax.random.split(key, len(cfg.pattern) + 4)
+    params: dict[str, Any] = {}
+    if cfg.n_codebooks:
+        ks = jax.random.split(keys[0], cfg.n_codebooks)
+        params["embed"] = {"codes": jnp.stack([
+            embedding_init(k, cfg.vocab_padded, cfg.d_model, pdt)["table"] for k in ks])}
+    else:
+        params["embed"] = embedding_init(keys[0], cfg.vocab_padded, cfg.d_model, pdt)
+    if not cfg.tie_embeddings:
+        out_dim = cfg.vocab_padded * max(1, cfg.n_codebooks)
+        params["head"] = linear_init(keys[1], cfg.d_model, out_dim, pdt)
+    params["final_norm"] = norm_init(cfg.norm, cfg.d_model, pdt)
+    if any("shared_attn" in kinds for _, kinds in cfg.pattern):
+        params["shared"] = _shared_attn_init(keys[2], cfg, pdt)
+
+    for si, (rep, kinds) in enumerate(cfg.pattern):
+        seg = {}
+        seg_key = keys[3 + si]
+        for j, kind in enumerate(kinds):
+            if kind == "shared_attn":
+                seg[f"blk{j}"] = {}
+                continue
+            bkeys = jax.random.split(jax.random.fold_in(seg_key, j), rep)
+            seg[f"blk{j}"] = jax.vmap(
+                lambda k: _init_block(kind, k, cfg, pdt))(bkeys)
+        params[f"seg{si}"] = seg
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (sequence mode: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_kind_args(cfg, kind):
+    if kind == "local":
+        return dict(window=cfg.local_window, theta=cfg.rope_theta_local)
+    if kind in ("global", "shared_attn", "attn", "attn_moe"):
+        w = cfg.window if kind in ("attn", "attn_moe") else 0
+        return dict(window=w, theta=cfg.rope_theta)
+    return dict(window=0, theta=cfg.rope_theta)
+
+
+def _apply_block_seq(kind, p, shared, cfg, x, ctx, want_cache):
+    """Returns (x, cache_entry_or_None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    positions = ctx["positions"]
+    if kind in ("attn", "local", "global"):
+        ka = _attn_kind_args(cfg, kind)
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        out = A.gqa_forward(p["attn"], cfg, h, positions, causal=True,
+                            schedule=cfg.attn_schedule, block_q=cfg.block_q,
+                            block_k=cfg.block_k, return_kv=want_cache, **ka)
+        if want_cache:
+            y, (k, v) = out
+            cache = _ring_pack(k, v, ka["window"], ctx["max_len"])
+        else:
+            y, cache = out, None
+        x = x + y
+        x = x + mlp(p["mlp"], norm_apply(cfg.norm, p["ln2"], x), cfg.act)
+        return x, cache, aux
+    if kind == "mla":
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        out = A.mla_forward(p["attn"], cfg, h, positions, return_cache=want_cache,
+                            schedule=cfg.attn_schedule)
+        if want_cache:
+            y, (ckv, kr) = out
+            cache = _mla_pack(ckv, kr, ctx["max_len"])
+        else:
+            y, cache = out, None
+        x = x + y
+        x = x + mlp(p["mlp"], norm_apply(cfg.norm, p["ln2"], x), cfg.act)
+        return x, cache, aux
+    if kind == "attn_moe":
+        ka = _attn_kind_args(cfg, kind)
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        out = A.gqa_forward(p["attn"], cfg, h, positions, causal=True,
+                            schedule=cfg.attn_schedule, block_q=cfg.block_q,
+                            block_k=cfg.block_k, return_kv=want_cache, **ka)
+        if want_cache:
+            y, (k, v) = out
+            cache = _ring_pack(k, v, ka["window"], ctx["max_len"])
+        else:
+            y, cache = out, None
+        x = x + y
+        ff, aux = MOE.moe_forward(p["moe"], cfg, norm_apply(cfg.norm, p["ln2"], x))
+        x = x + ff
+        return x, cache, aux
+    if kind == "mamba":
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        if want_cache:
+            y, st = SSM.mamba2_forward(p["mamba"], cfg, h, chunk=cfg.ssm_chunk,
+                                       return_state=True)
+            return x + y, st, aux
+        return x + SSM.mamba2_forward(p["mamba"], cfg, h, chunk=cfg.ssm_chunk), None, aux
+    if kind == "rwkv":
+        h = norm_apply("ln", p["ln1"], x)
+        if want_cache:
+            y, tm_state = RW.rwkv6_timemix(p["tm"], cfg, h, chunk=cfg.rwkv_chunk,
+                                           return_state=True)
+            x = x + y
+            h2 = norm_apply("ln", p["ln2"], x)
+            y2, cm_prev = RW.channelmix(p["cm"], cfg, h2, return_state=True)
+            x = x + y2
+            return x, {"s": tm_state["s"], "prev": tm_state["prev"],
+                       "cm_prev": cm_prev}, aux
+        x = x + RW.rwkv6_timemix(p["tm"], cfg, h, chunk=cfg.rwkv_chunk)
+        x = x + RW.channelmix(p["cm"], cfg, norm_apply("ln", p["ln2"], x))
+        return x, None, aux
+    if kind == "cross":
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        q, k, v = A.gqa_project(p["attn"], cfg, h, positions,
+                                theta=cfg.rope_theta, kv_src=ctx["vision"],
+                                rope=False)
+        o = A.dense_attention(q, k, v, causal=False)
+        y = linear(p["attn"]["wo"], o.reshape(x.shape[0], x.shape[1], -1))
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * y
+        x = x + mlp(p["mlp"], norm_apply(cfg.norm, p["ln2"], x), cfg.act)
+        cache = {"k": k, "v": v} if want_cache else None
+        return x, cache, aux
+    if kind == "shared_attn":
+        p = shared
+        h = jnp.concatenate([x, ctx["x0"]], axis=-1)
+        h = linear(p["in_proj"], h)
+        h = norm_apply(cfg.norm, p["ln1"], h)
+        out = A.gqa_forward(p["attn"], cfg, h, positions, causal=True,
+                            schedule=cfg.attn_schedule, block_q=cfg.block_q,
+                            block_k=cfg.block_k, return_kv=want_cache,
+                            theta=cfg.rope_theta, window=cfg.window)
+        if want_cache:
+            y, (k, v) = out
+            cache = _ring_pack(k, v, cfg.window, ctx["max_len"])
+        else:
+            y, cache = out, None
+        x = x + y
+        x = x + mlp(p["mlp"], norm_apply(cfg.norm, p["ln2"], x), cfg.act)
+        return x, cache, aux
+    raise ValueError(kind)
+
+
+def _ring_pack(k, v, window, max_len):
+    """Convert full prefill K/V to the decode cache layout (ring for SWA)."""
+    b, s = k.shape[:2]
+    c = min(window, max_len) if window > 0 else max_len
+    ck = jnp.zeros((b, c) + k.shape[2:], k.dtype)
+    cv = jnp.zeros((b, c) + v.shape[2:], v.dtype)
+    if s <= c:
+        ck = ck.at[:, :s].set(k)
+        cv = cv.at[:, :s].set(v)
+    else:
+        slots = jnp.mod(jnp.arange(s - c, s), c)
+        ck = ck.at[:, slots].set(k[:, s - c:])
+        cv = cv.at[:, slots].set(v[:, s - c:])
+    return {"k": ck, "v": cv}
+
+
+def _mla_pack(ckv, kr, max_len):
+    b, s = ckv.shape[:2]
+    out_c = jnp.zeros((b, max_len, ckv.shape[-1]), ckv.dtype).at[:, :s].set(ckv)
+    out_r = jnp.zeros((b, max_len, kr.shape[-1]), kr.dtype).at[:, :s].set(kr)
+    return {"ckv": out_c, "kr": out_r}
+
+
+# ---------------------------------------------------------------------------
+# forward (sequence)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg, batch, *, pos_offset=0):
+    adt = _dt(cfg, "act")
+    if cfg.n_codebooks:
+        codes = batch["codes"]  # [B, S, nq]
+        x = sum(jnp.take(params["embed"]["codes"][q], codes[..., q], axis=0)
+                for q in range(cfg.n_codebooks))
+    else:
+        x = embed(params["embed"], batch["tokens"])
+    x = x.astype(adt)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.pos == "sinusoidal":
+        s = x.shape[1]
+        x = x + sinusoidal_positions(s, cfg.d_model, offset=pos_offset).astype(adt)[None]
+    return x
+
+
+def forward_hidden(params, cfg, batch, *, want_caches=False, max_len=0):
+    """Full-sequence forward. Returns (hidden, caches, aux)."""
+    x = embed_inputs(params, cfg, batch)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    vision = batch.get("vision")
+    if vision is not None:
+        vision = vision.astype(x.dtype)
+    ctx = {"positions": positions, "vision": vision, "x0": x,
+           "max_len": max_len if max_len else s}
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    for si, (rep, kinds) in enumerate(cfg.pattern):
+        seg_params = params[f"seg{si}"]
+
+        def body(carry, p_g):
+            x, aux = carry
+            x = shard_act(x, "batch", "seq", None)
+            new_caches = {}
+            for j, kind in enumerate(kinds):
+                x, cache, a = _apply_block_seq(
+                    kind, p_g[f"blk{j}"], params.get("shared"), cfg, x, ctx,
+                    want_caches)
+                aux = aux + a
+                if want_caches:
+                    new_caches[f"blk{j}"] = cache if cache is not None else {}
+            return (x, aux), (new_caches if want_caches else None)
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        (x, aux_total), seg_caches = jax.lax.scan(body, (x, aux_total), seg_params)
+        if want_caches:
+            caches[f"seg{si}"] = seg_caches
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    return x, (caches if want_caches else None), aux_total
+
+
+def head_logits(params, cfg, x):
+    """x: [B, S, d] -> logits [B, S, vocab_padded] (or [..., nq, vocab])."""
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"]["table"].T.astype(jnp.float32)
+    else:
+        logits = x.astype(jnp.float32) @ params["head"]["w"].astype(jnp.float32)
+    if cfg.n_codebooks:
+        b, s = x.shape[:2]
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_padded)
+        return shard_act(logits, "batch", "seq", None, "vocab")
+    return shard_act(logits, "batch", "seq", "vocab")
+
+
+def _vocab_mask(cfg):
+    cols = jnp.arange(cfg.vocab_padded)
+    return jnp.where(cols < cfg.vocab, 0.0, NEG_INF)
+
+
+def _ce(cfg, logits, labels):
+    """Cross-entropy over the (padded, masked) vocab. logits f32."""
+    logits = logits + _vocab_mask(cfg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return lse - gold
+
+
+def loss_fn(params, cfg, batch):
+    """Chunked-over-sequence LM loss; returns (loss, metrics)."""
+    x, _, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    b, s = x.shape[:2]
+    chunk = min(cfg.loss_chunk, s)
+    nch = s // chunk
+    assert s % chunk == 0, f"seq {s} % loss_chunk {chunk} != 0"
+    xs = x.reshape(b, nch, chunk, -1).transpose(1, 0, 2, 3)
+    if cfg.n_codebooks:
+        ls = labels.reshape(b, nch, chunk, cfg.n_codebooks).transpose(1, 0, 2, 3)
+    else:
+        ls = labels.reshape(b, nch, chunk).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        xc, lc = inp
+        logits = head_logits(params, cfg, xc)
+        ce = _ce(cfg, logits, lc)
+        return carry + ce.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xs, ls))
+    denom = b * s * max(1, cfg.n_codebooks)
+    loss = total / denom + cfg.moe_aux_coef * aux / max(1, cfg.layer_count())
+    return loss, {"ce": total / denom, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch_size: int, max_len: int):
+    """Abstract-friendly cache init (zeros)."""
+    adt = _dt(cfg, "act")
+    caches = {}
+    for si, (rep, kinds) in enumerate(cfg.pattern):
+        seg = {}
+        for j, kind in enumerate(kinds):
+            c_full = max_len
+            if kind in ("attn", "attn_moe") and cfg.window > 0:
+                c_full = min(cfg.window, max_len)
+            if kind == "local":
+                c_full = min(cfg.local_window, max_len)
+            hk, hd = cfg.n_kv_heads, cfg.head_dim
+            if kind in ("attn", "local", "global", "attn_moe", "shared_attn"):
+                seg[f"blk{j}"] = {
+                    "k": jnp.zeros((rep, batch_size, c_full, hk, hd), adt),
+                    "v": jnp.zeros((rep, batch_size, c_full, hk, hd), adt)}
+            elif kind == "mla":
+                m = cfg.mla
+                seg[f"blk{j}"] = {
+                    "ckv": jnp.zeros((rep, batch_size, max_len, m.kv_lora), adt),
+                    "kr": jnp.zeros((rep, batch_size, max_len, m.rope), adt)}
+            elif kind == "mamba":
+                heads = cfg.ssm_d_inner // cfg.ssm_head_dim
+                seg[f"blk{j}"] = {
+                    "h": jnp.zeros((rep, batch_size, heads, cfg.ssm_head_dim,
+                                    cfg.ssm_state), jnp.float32),
+                    "conv": jnp.zeros((rep, batch_size, cfg.ssm_conv - 1,
+                                       cfg.ssm_d_inner + 2 * cfg.ssm_state), adt)}
+            elif kind == "rwkv":
+                heads = cfg.d_model // cfg.rwkv_head_dim
+                seg[f"blk{j}"] = {
+                    "s": jnp.zeros((rep, batch_size, heads, cfg.rwkv_head_dim,
+                                    cfg.rwkv_head_dim), jnp.float32),
+                    "prev": jnp.zeros((rep, batch_size, 1, cfg.d_model), adt),
+                    "cm_prev": jnp.zeros((rep, batch_size, 1, cfg.d_model), adt)}
+            elif kind == "cross":
+                seg[f"blk{j}"] = {
+                    "k": jnp.zeros((rep, batch_size, cfg.n_vision_tokens, hk, hd), adt),
+                    "v": jnp.zeros((rep, batch_size, cfg.n_vision_tokens, hk, hd), adt)}
+        caches[f"seg{si}"] = seg
+    return caches
+
+
+def prefill(params, cfg, batch, max_len: int):
+    """Run the prompt, return (last-token logits, caches)."""
+    x, caches, _ = forward_hidden(params, cfg, batch, want_caches=True,
+                                  max_len=max_len)
+    logits = head_logits(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def _apply_block_decode(kind, p, shared, cfg, x, cache, ctx):
+    pos = ctx["pos"]
+    if kind in ("attn", "local", "global", "attn_moe", "shared_attn"):
+        ka = _attn_kind_args(cfg, kind)
+        if kind == "shared_attn":
+            p = shared
+            h = linear(p["in_proj"], jnp.concatenate([x, ctx["x0"]], axis=-1))
+            h = norm_apply(cfg.norm, p["ln1"], h)
+        else:
+            h = norm_apply(cfg.norm, p["ln1"], x)
+        # ring semantics apply iff the cache is shorter than max_len
+        ring_window = ka["window"] if (ka["window"] > 0 and cache["k"].shape[1] < ctx["max_len"]) else ka["window"]
+        y, ck, cv = A.gqa_decode(p["attn"], cfg, h, cache["k"], cache["v"], pos,
+                                 window=ring_window, theta=ka["theta"])
+        x = x + y
+        if kind == "attn_moe":
+            ff, _ = MOE.moe_forward(p["moe"], cfg, norm_apply(cfg.norm, p["ln2"], x))
+            x = x + ff
+        else:
+            x = x + mlp(p["mlp"], norm_apply(cfg.norm, p["ln2"], x), cfg.act)
+        return x, {"k": ck, "v": cv}
+    if kind == "mla":
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        y, ckv, kr = A.mla_decode(p["attn"], cfg, h, cache["ckv"], cache["kr"], pos)
+        x = x + y
+        x = x + mlp(p["mlp"], norm_apply(cfg.norm, p["ln2"], x), cfg.act)
+        return x, {"ckv": ckv, "kr": kr}
+    if kind == "mamba":
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        y, st = SSM.mamba2_decode(p["mamba"], cfg, h, cache)
+        return x + y, st
+    if kind == "rwkv":
+        h = norm_apply("ln", p["ln1"], x)
+        y, tm = RW.rwkv6_decode(p["tm"], cfg, h, {"s": cache["s"], "prev": cache["prev"]})
+        x = x + y
+        h2 = norm_apply("ln", p["ln2"], x)
+        y2, cm_prev = RW.channelmix(p["cm"], cfg, h2, state=cache["cm_prev"],
+                                    return_state=True)
+        x = x + y2
+        return x, {"s": tm["s"], "prev": tm["prev"], "cm_prev": cm_prev}
+    if kind == "cross":
+        h = norm_apply(cfg.norm, p["ln1"], x)
+        hd = cfg.head_dim
+        q = linear(p["attn"]["wq"], h).reshape(x.shape[0], 1, cfg.n_heads, hd)
+        if cfg.qk_norm:
+            from .layers import rmsnorm
+            q = rmsnorm(p["attn"]["qnorm"], q)
+        o = A.dense_attention(q, cache["k"], cache["v"], causal=False)
+        y = linear(p["attn"]["wo"], o.reshape(x.shape[0], 1, -1))
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * y
+        x = x + mlp(p["mlp"], norm_apply(cfg.norm, p["ln2"], x), cfg.act)
+        return x, {"k": cache["k"], "v": cache["v"]}
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg, caches, batch, pos):
+    """One token for every sequence in the batch.
+
+    batch: {"tokens": [B,1]} or {"codes": [B,1,nq]}; pos: [B] absolute position.
+    Returns (logits [B,1,...], new caches).
+    """
+    offset = pos[0]
+    x = embed_inputs(params, cfg, batch, pos_offset=offset)
+    ctx = {"pos": pos, "x0": x, "max_len": _caches_max_len(cfg, caches)}
+    new_caches = {}
+    for si, (rep, kinds) in enumerate(cfg.pattern):
+        seg_params = params[f"seg{si}"]
+        seg_cache = caches[f"seg{si}"]
+
+        # The stacked cache is a scan *carry* updated in place with
+        # dynamic_update_index; passing it as xs/ys made XLA copy the whole
+        # stacked cache every layer (measured 560 GB/step on qwen3-32b
+        # decode_32k — see EXPERIMENTS.md §Perf decode iteration 2).
+        def body(carry, inp):
+            x, cache_full = carry
+            p_g, li = inp
+            new_c = {}
+            for j, kind in enumerate(kinds):
+                c_j = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, li, 0,
+                                                           keepdims=False),
+                    cache_full[f"blk{j}"])
+                x, nc = _apply_block_decode(kind, p_g[f"blk{j}"],
+                                            params.get("shared"), cfg, x,
+                                            c_j, ctx)
+                new_c[f"blk{j}"] = nc
+            cache_full = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), li, 0),
+                cache_full, new_c)
+            return (x, cache_full), None
+
+        (x, new_seg), _ = jax.lax.scan(
+            body, (x, seg_cache),
+            (seg_params, jnp.arange(rep, dtype=jnp.int32)))
+        new_caches[f"seg{si}"] = new_seg
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    return head_logits(params, cfg, x), new_caches
+
+
+def _caches_max_len(cfg, caches):
+    for si, (rep, kinds) in enumerate(cfg.pattern):
+        for j, kind in enumerate(kinds):
+            if kind in ("attn", "global", "attn_moe", "shared_attn"):
+                if kind in ("attn", "attn_moe") and cfg.window > 0:
+                    continue
+                return caches[f"seg{si}"][f"blk{j}"]["k"].shape[2]
+            if kind == "mla":
+                return caches[f"seg{si}"][f"blk{j}"]["ckv"].shape[2]
+    return 1 << 30  # SSM-only stacks: unbounded
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    """Exact param count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if active_only and cfg.n_experts:
+        # subtract inactive expert weights
+        per_expert = 2 * cfg.d_model * cfg.expert_ff + cfg.expert_ff * cfg.d_model
+        n_moe = sum(rep * kinds.count("attn_moe") for rep, kinds in cfg.pattern)
+        total -= n_moe * per_expert * (cfg.n_experts - cfg.top_k)
+    return total
+
+
+def non_embedding_params(cfg) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    emb = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(
+        {"e": shapes.get("embed"), "h": shapes.get("head")}))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    return total - emb

@@ -1,0 +1,202 @@
+"""RWKV-6 (Finch) block: data-dependent per-channel decay linear attention.
+
+Per head (head dim K = V):
+    S_t = diag(w_t) · S_{t-1} + k_t ⊗ v_t            S: [K, V]
+    y_t = r_t · (S_{t-1} + diag(u) · k_t ⊗ v_t)
+with w_t = exp(-exp(w0 + LoRA(x̃_t))) — the data-dependent decay that defines
+RWKV-6.  The sequence path is chunked (intra-chunk pairwise with per-channel
+log-decay differences, inter-chunk state carry) and is the oracle for
+``repro.kernels.rwkv6``.  Decode carries (S, prev-token) per layer: O(1)
+state — this is why rwkv6-7b runs the long_500k shape.
+
+Simplification vs upstream (recorded in DESIGN.md): token-shift mixing uses
+static per-stream μ (RWKV-5 style) while the decay keeps the full RWKV-6
+LoRA data dependence; GroupNorm over heads is a per-head LayerNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import shard_act
+from .layers import layernorm, layernorm_init, linear, linear_init
+
+
+def rwkv6_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    heads = d // hd
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 64)
+    return {
+        "mu": (0.5 * jnp.ones((5, d))).astype(dtype),  # r,k,v,g,w token-shift mixes
+        "wr": linear_init(ks[0], d, d, dtype),
+        "wk": linear_init(ks[1], d, d, dtype),
+        "wv": linear_init(ks[2], d, d, dtype),
+        "wg": linear_init(ks[3], d, d, dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": linear_init(ks[4], d, lora, dtype),
+        "w_lora_b": linear_init(ks[5], lora, d, dtype, scale=0.01),
+        "u": (jax.random.normal(ks[6], (heads, hd)) * 0.1).astype(jnp.float32),
+        "ln_y": layernorm_init(hd, dtype),
+        "wo": linear_init(ks[7], d, d, dtype),
+    }
+
+
+def channelmix_init(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": (0.5 * jnp.ones((2, d))).astype(dtype),
+        "wk": linear_init(k1, d, f, dtype),
+        "wv": linear_init(k2, f, d, dtype),
+        "wr": linear_init(k3, d, d, dtype),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros / carried last token at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(r, k, v, lw, u, *, chunk: int, s0=None):
+    """Chunked RWKV-6 recurrence.
+
+    r,k,v: [B,S,H,K]; lw: [B,S,H,K] log-decay (<= 0); u: [H,K] bonus.
+    Returns y [B,S,H,K] and final state [B,H,K,K] (k-major, v-minor).
+    """
+    bsz, s, h, kd = r.shape
+    nc = s // chunk
+    rs = r.reshape(bsz, nc, chunk, h, kd).astype(jnp.float32)
+    ks_ = k.reshape(bsz, nc, chunk, h, kd).astype(jnp.float32)
+    vs = v.reshape(bsz, nc, chunk, h, kd).astype(jnp.float32)
+    lws = lw.reshape(bsz, nc, chunk, h, kd).astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, kd, kd), jnp.float32)
+
+    tri_lo = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(sprev, inp):
+        rc, kc, vc, lwc = inp                      # [B,L,H,K]
+        cwe = jnp.cumsum(lwc, axis=1) - lwc        # exclusive prefix
+        cwl = cwe[:, -1] + lwc[:, -1]              # total log decay  [B,H,K]
+        # intra-chunk: att[i,j] = sum_k r_i k_j exp(cwe_i - cwe_j - lw_j), j<i
+        rel = cwe[:, :, None] - (cwe + lwc)[:, None, :, :]        # [B,L,L,H,K]
+        # mask BEFORE exp (masked entries are positive and overflow backward)
+        gate = jnp.exp(jnp.where(tri_lo[None, :, :, None, None], rel, -jnp.inf))
+        att = jnp.einsum("bihk,bjhk,bijhk->bijh", rc, kc, gate)
+        y = jnp.einsum("bijh,bjhv->bihv", att, vc)
+        # diagonal bonus
+        y = y + jnp.einsum("bihk,hk,bihk,bihv->bihv", rc, u, kc, vc)
+        # inter-chunk from carried state
+        y = y + jnp.einsum("bihk,bihk,bhkv->bihv", rc, jnp.exp(cwe), sprev * 0 + sprev)
+        # state update
+        wdec = jnp.exp(cwl)                                        # [B,H,K]
+        carry = jnp.exp(cwl[:, None] - cwe - lwc)                  # [B,L,H,K]
+        snew = sprev * wdec[..., None] + jnp.einsum(
+            "bjhk,bjhk,bjhv->bhkv", carry, kc, vc)
+        return snew, y
+
+    inputs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rs, ks_, vs, lws))
+    sf, ys = jax.lax.scan(body, s0, inputs)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, kd), sf
+
+
+def wkv6_reference(r, k, v, lw, u):
+    """O(S) sequential oracle."""
+    bsz, s, h, kd = r.shape
+
+    def step(sprev, inp):
+        rt, kt, vt, lwt = inp
+        bonus = jnp.einsum("hk,bhk,bhv->bhkv", u, kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, sprev + bonus)
+        snew = sprev * jnp.exp(lwt)[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return snew, yt
+
+    s0 = jnp.zeros((bsz, h, kd, kd), jnp.float32)
+    inputs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (r, k, v, lw))
+    sf, ys = jax.lax.scan(step, s0, inputs)
+    return ys.transpose(1, 0, 2, 3), sf
+
+
+def rwkv6_timemix(params, cfg, x, *, chunk: int = 64, state=None, return_state=False):
+    """x: [B,S,d]. state: {"s": [B,H,K,K], "prev": [B,1,d]} for chunked prefill
+    continuation / decode."""
+    bsz, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    heads = d // hd
+    prev = None if state is None else state["prev"]
+    xx = _shift(x, prev) - x
+    mu = params["mu"]
+    xr = x + xx * mu[0]
+    xk = x + xx * mu[1]
+    xv = x + xx * mu[2]
+    xg = x + xx * mu[3]
+    xw = x + xx * mu[4]
+    r = shard_act(linear(params["wr"], xr).reshape(bsz, s, heads, hd),
+                  "batch", "seq", "heads", None)
+    k = shard_act(linear(params["wk"], xk).reshape(bsz, s, heads, hd),
+                  "batch", "seq", "heads", None)
+    v = shard_act(linear(params["wv"], xv).reshape(bsz, s, heads, hd),
+                  "batch", "seq", "heads", None)
+    g = jax.nn.silu(linear(params["wg"], xg))
+    lora = linear(params["w_lora_b"], jnp.tanh(linear(params["w_lora_a"], xw)))
+    lw = -jnp.exp(params["w0"] + lora.astype(jnp.float32))          # log decay <= 0
+    lw = lw.reshape(bsz, s, heads, hd)
+    s0 = None if state is None else state["s"]
+    pad = (-s) % chunk
+    if pad:
+        r2 = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k2 = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v2 = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw2 = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        r2, k2, v2, lw2 = r, k, v, lw
+    y, sf = wkv6_chunked(r2, k2, v2, lw2, params["u"], chunk=chunk, s0=s0)
+    y = y[:, :s]
+    y = layernorm(params["ln_y"], y.astype(x.dtype))
+    y = (y.reshape(bsz, s, d) * g)
+    out = linear(params["wo"], y)
+    if return_state:
+        # note: state is exact only when pad == 0 (padded steps carry k=v=0
+        # but decay exp(lw_pad)... lw at pads is -exp(w0+...) of zeros input)
+        return out, {"s": sf, "prev": x[:, -1:]}
+    return out
+
+
+def rwkv6_decode(params, cfg, x, state):
+    """One-token decode; state {"s","prev"} -> (y, new_state)."""
+    bsz, _, d = x.shape
+    hd = cfg.rwkv_head_dim
+    heads = d // hd
+    xx = state["prev"] - x
+    mu = params["mu"]
+    r = linear(params["wr"], x + xx * mu[0]).reshape(bsz, heads, hd)
+    k = linear(params["wk"], x + xx * mu[1]).reshape(bsz, heads, hd)
+    v = linear(params["wv"], x + xx * mu[2]).reshape(bsz, heads, hd)
+    g = jax.nn.silu(linear(params["wg"], x + xx * mu[3]))
+    lora = linear(params["w_lora_b"], jnp.tanh(linear(params["w_lora_a"], x + xx * mu[4])))
+    lw = -jnp.exp(params["w0"] + lora[:, 0].astype(jnp.float32)).reshape(bsz, heads, hd)
+    sprev = state["s"]
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    bonus = jnp.einsum("hk,bhk,bhv->bhkv", params["u"], kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, sprev + bonus)
+    snew = sprev * jnp.exp(lw)[..., None] + jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = layernorm(params["ln_y"], y.astype(x.dtype)[:, None].reshape(bsz, 1, heads, hd))
+    y = y.reshape(bsz, 1, d) * g
+    return linear(params["wo"], y), {"s": snew, "prev": x}
+
+
+def channelmix(params, cfg, x, *, state=None, return_state=False):
+    prev = None if state is None else state
+    xx = _shift(x, prev) - x
+    xk = x + xx * params["mu"][0]
+    xr = x + xx * params["mu"][1]
+    k = jnp.square(jax.nn.relu(linear(params["wk"], xk)))
+    kv = linear(params["wv"], k)
+    out = jax.nn.sigmoid(linear(params["wr"], xr)) * kv
+    if return_state:
+        return out, x[:, -1:]
+    return out

@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD) block for the zamba2 hybrid architecture.
+
+State-space recurrence per head (scalar decay a_t, state N, head dim P):
+    h_t = a_t * h_{t-1} + dt_t * B_t ⊗ x_t          h: [P, N]
+    y_t = C_t · h_t + D * x_t
+with a_t = exp(-softplus(dt_raw_t + dt_bias) * A_head).
+
+The sequence path uses the chunked SSD formulation (intra-chunk quadratic in
+chunk length + inter-chunk state carry), scanned over chunks — this is the
+pure-jnp oracle for ``repro.kernels.mamba2``.  Decode is the 1-step
+recurrence carrying (conv window, state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import shard_act
+from .layers import linear, linear_init, rmsnorm, rmsnorm_init
+
+
+def mamba2_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    heads = di // cfg.ssm_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj -> [z (di), x (di), B (n), C (n), dt (heads)]
+    d_in_proj = 2 * di + 2 * n + heads
+    return {
+        "in_proj": linear_init(k1, d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, di + 2 * n), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": linear_init(k3, di, d, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    heads = di // cfg.ssm_head_dim
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(w, b, xbc, conv_state=None):
+    """Depthwise short conv over time. xbc: [B,S,D]; returns same + new state."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None, :] for i in range(k))
+    out = jax.nn.silu(out + b[None, None, :])
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return out, new_state
+
+
+def ssd_chunked(x, a, b, c, dt, *, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: [B,S,H,P] (dt-scaled inputs), a: [B,S,H] per-step decay in (0,1],
+    b,c: [B,S,N] (shared across heads, Mamba-2 style), dt is already folded
+    into x. Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    xs = x.reshape(bsz, nc, chunk, h, p)
+    as_ = a.reshape(bsz, nc, chunk, h)
+    bs = b.reshape(bsz, nc, chunk, n)
+    cs = c.reshape(bsz, nc, chunk, n)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    la = jnp.log(jnp.maximum(as_, 1e-20))           # [B,nc,L,H]
+    cum = jnp.cumsum(la, axis=2)                     # prefix log-decay inclusive
+
+    def body(hprev, inp):
+        xc, lac, cumc, bc, cc = inp                  # chunk tensors, leading B
+        # intra-chunk: y[i] += sum_{j<=i} exp(cum[i]-cum[j]) * (C_i·B_j) x_j
+        rel = cumc[:, :, None, :] - cumc[:, None, :, :]          # [B,L,L,H]
+        tri = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        # mask BEFORE exp: exp of masked (positive) entries would overflow and
+        # poison the backward pass through the where.
+        g = jnp.exp(jnp.where(tri[None, :, :, None], rel, -jnp.inf))
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)                   # [B,L,L]
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, g, xc)
+        # inter-chunk: decay from h_prev
+        decay_in = jnp.exp(cumc)                                   # [B,L,H]
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cc, hprev, decay_in)
+        y = y_intra + y_inter
+        # state update: h = decay_total*h_prev + sum_j exp(cum_L - cum_j) B_j x_j
+        tot = jnp.exp(cumc[:, -1])                                 # [B,H]
+        w = jnp.exp(cumc[:, -1][:, None, :] - cumc)                # [B,L,H]
+        dh = jnp.einsum("bjh,bjn,bjhp->bhpn", w, bc, xc)
+        hnew = hprev * tot[:, :, None, None] + dh
+        return hnew, y
+
+    inputs = (
+        xs.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+        la.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+        bs.astype(jnp.float32).transpose(1, 0, 2, 3),
+        cs.astype(jnp.float32).transpose(1, 0, 2, 3),
+    )
+    hf, ys = jax.lax.scan(lambda hp, i: body(hp, i), h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y, hf
+
+
+def mamba2_forward(params, cfg, x, *, chunk: int = 128, return_state=False):
+    """x: [B, S, d] -> [B, S, d]."""
+    bsz, s, _ = x.shape
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    heads = di // hd
+    z, xbc, dt_raw = _split_proj(cfg, linear(params["in_proj"], x))
+    xbc, conv_state = _causal_conv(params["conv_w"], params["conv_b"], xbc)
+    xi = shard_act(xbc[..., :di].reshape(bsz, s, heads, hd),
+                   "batch", "seq", "heads", None)
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # [B,S,H]
+    a = jnp.exp(-dt * jnp.exp(params["a_log"]))                            # decay
+    xin = xi.astype(jnp.float32) * dt[..., None]
+    pad = (-s) % chunk
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, hf = ssd_chunked(xin, a, b, c, dt, chunk=chunk)
+    y = y[:, :s]
+    y = y + xi.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = linear(params["out_proj"], y)
+    if return_state:
+        return out, {"h": hf, "conv": conv_state}
+    return out
+
+
+def mamba2_decode(params, cfg, x, state, pos=None):
+    """One-token decode. x: [B,1,d]; state: {h: [B,H,P,N], conv: [B,k-1,D]}."""
+    bsz = x.shape[0]
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    heads = di // hd
+    z, xbc, dt_raw = _split_proj(cfg, linear(params["in_proj"], x))
+    xbc, conv_state = _causal_conv(params["conv_w"], params["conv_b"], xbc,
+                                   conv_state=state["conv"])
+    xi = xbc[:, 0, :di].reshape(bsz, heads, hd)
+    b = xbc[:, 0, di:di + n]
+    c = xbc[:, 0, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = jnp.exp(-dt * jnp.exp(params["a_log"]))
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xi.astype(jnp.float32), b.astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bn->bhp", h, c.astype(jnp.float32))
+    y = y + xi.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return linear(params["out_proj"], y), {"h": h, "conv": conv_state}
+
+
+def ssd_reference(x, a, b, c):
+    """O(S) sequential oracle for tests. Shapes as in ssd_chunked."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(hprev, inp):
+        xt, at, bt, ct = inp
+        hnew = hprev * at[..., None, None] + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        yt = jnp.einsum("bhpn,bn->bhp", hnew, ct)
+        return hnew, yt
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    inputs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+              a.transpose(1, 0, 2).astype(jnp.float32),
+              b.transpose(1, 0, 2).astype(jnp.float32),
+              c.transpose(1, 0, 2).astype(jnp.float32))
+    hf, ys = jax.lax.scan(step, h0, inputs)
+    return ys.transpose(1, 0, 2, 3), hf

@@ -1,0 +1,154 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Terms (per (arch, shape, mesh) cell), TPU v5e constants:
+
+    compute_s    = FLOPs_per_device / 197e12        (bf16 MXU peak per chip)
+    memory_s     = bytes_per_device / 819e9         (HBM bandwidth per chip)
+    collective_s = collective_bytes_per_device / 50e9   (per-link ICI)
+
+``compiled.cost_analysis()`` is evaluated on the SPMD-partitioned per-device
+module, so its flops/bytes are already per-device; dividing by per-chip peak
+gives the same number as total/(chips x peak) in the assignment formula.
+Collective bytes are not in cost_analysis: we parse the post-optimization
+HLO and sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D
+(MoE); the ratio MODEL_FLOPS / HLO_FLOPs flags remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, Any]:
+    """Sum operand bytes per collective kind from post-optimization HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            # match op name after '=' to avoid matching variable names
+            if re.search(rf"=\s*(\([^)]*\)\s*)?[a-z0-9\[\],{{}} ]*{k}(-start|-done)?\(", s):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done" in s:
+            continue  # operands counted at -start
+        # operand shapes are inside the call parens; result shape precedes '='
+        lhs, _, rhs = s.partition("=")
+        m = re.search(rf"{kind}(?:-start)?\((.*)\)\s*(,|$)", rhs)
+        args = m.group(1) if m else rhs
+        bytes_ = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(args))
+        out[kind] += bytes_
+        counts[kind] += 1
+    total = sum(out.values())
+    return {"per_kind_bytes": out, "per_kind_count": counts, "total_bytes": total}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D with N = active params (MoE counts top-k experts only)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_compiled(cfg, shape, compiled, chips: int) -> dict:
+    from .hlo_parse import analyze_hlo
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+    except Exception:
+        ca = {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    # loop-aware accounting (cost_analysis counts while bodies once; our
+    # scanned-layer models would be undercounted by the trip count)
+    acc = analyze_hlo(hlo) if hlo else {}
+    flops = float(acc.get("flops", 0.0)) or float(ca.get("flops", 0.0))
+    bytes_acc = (float(acc.get("bytes_accessed", 0.0))
+                 or float(ca.get("bytes accessed", 0.0)))
+    coll = {
+        "per_kind_bytes": acc.get("collective_bytes", {}),
+        "per_kind_count": acc.get("collective_count", {}),
+        "total_bytes": acc.get("collective_total_bytes", 0.0),
+    }
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll["total_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    mf_per_device = mf / chips
+    useful_ratio = mf_per_device / flops if flops else 0.0
+    # roofline fraction: useful model flops per device per bound-step-time
+    step_time = max(terms.values())
+    roofline_frac = (mf_per_device / PEAK_FLOPS) / step_time if step_time else 0.0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception:
+        pass
+
+    return {
+        "chips": chips,
+        "flops_per_device": flops,
+        "flops_cost_analysis_raw": float(ca.get("flops", 0.0)),
+        "bytes_per_device": bytes_acc,
+        "collectives": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops_total": mf,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": roofline_frac,
+        "memory_analysis": mem,
+        "cost_analysis_keys": sorted(ca)[:40] if ca else [],
+    }

@@ -1,0 +1,361 @@
+"""Loop-aware post-optimization HLO accounting.
+
+``compiled.cost_analysis()`` counts a ``while`` body once, so scanned-layer
+models (all of ours — scan keeps HLO compact at 512 devices) under-report
+FLOPs, bytes and collectives by the trip count.  XLA, however, prints
+``backend_config={"known_trip_count":{"n":...}}`` on every counted loop, so
+we parse the module text, build the computation call graph (while/fusion/
+call/conditional edges), and multiply per-computation stats by the product
+of enclosing trip counts:
+
+  * FLOPs      — every ``dot`` (2 x numel(result) x contracted size); the
+    contracted size comes from the operand's defining instruction, since
+    post-opt HLO does not inline operand shapes.
+  * collective — operand bytes of all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute (`-start` counted, `-done` skipped).
+  * bytes      — operands + result of every data-moving instruction at
+    computation level (fusion internals excluded: on-chip).
+
+Validated against compiled.cost_analysis() on loop-free (fully unrolled)
+modules in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import re
+from typing import Iterator
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPND = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR = re.compile(r"(?:body|calls)=\{?%?([\w\.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shapes_in(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "opcode", "result_shapes", "operands", "attrs")
+
+    def __init__(self, name, opcode, result_shapes, operands, attrs):
+        self.name = name
+        self.opcode = opcode
+        self.result_shapes = result_shapes
+        self.operands = operands
+        self.attrs = attrs
+
+
+_SCALAR_TYPE_RE = re.compile(r"^[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?")
+_OPCODE_TOKEN = re.compile(r"\s*([a-z0-9\-]+)")
+
+
+def _split_type_opcode(rhs: str) -> tuple[str, str, int] | None:
+    """Return (type_str, opcode, index_after_opcode) or None."""
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_end = i + 1
+    else:
+        m = _SCALAR_TYPE_RE.match(rhs)
+        if not m:
+            return None
+        type_end = m.end()
+    mo = _OPCODE_TOKEN.match(rhs, type_end)
+    if not mo:
+        return None
+    return rhs[:type_end], mo.group(1), mo.end()
+
+
+_HEADER_START = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+
+
+def parse_module(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    pending_header: str | None = None  # wrapped multi-line header in progress
+    for line in text.splitlines():
+        if pending_header is not None:
+            # consume wrapped header lines until the opening brace
+            if line.rstrip().endswith("{"):
+                cur = []
+                comps[pending_header] = cur
+                pending_header = None
+            continue
+        m = _HEADER_START.match(line) if line and not line[0].isspace() else None
+        if m:
+            # a computation header starts at column 0
+            if line.rstrip().endswith("{"):
+                cur = []
+                comps[m.group(1)] = cur
+            else:
+                pending_header = m.group(1)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        # result type: everything before the opcode token
+        split = _split_type_opcode(rhs)
+        if split is None:
+            continue
+        type_str, opcode, after = split
+        result_shapes = _shapes_in(type_str)
+        # operands: %names inside the first top-level parens after opcode
+        rest = rhs[after:]
+        depth = 0
+        args = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        operands = _OPND.findall(args)
+        cur.append(Instr(name, opcode, result_shapes, operands, rhs))
+    return comps
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = parse_module(text)
+    # per-computation symbol table of result shapes
+    sym = {c: {i.name: i.result_shapes for i in instrs}
+           for c, instrs in comps.items()}
+
+    # call edges: (caller -> [(callee, multiplier)])
+    edges: dict[str, list[tuple[str, int]]] = collections.defaultdict(list)
+    fusion_called: set[str] = set()
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "while":
+                trip = 1
+                mt = _TRIP.search(ins.attrs)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = _CALL_ATTR.search(ins.attrs)
+                if mb:
+                    edges[cname].append((mb.group(1), trip))
+                mc = _COND_ATTR.search(ins.attrs)
+                if mc:
+                    edges[cname].append((mc.group(1), trip + 1))
+            elif ins.opcode in ("fusion", "call", "custom-call", "reduce",
+                                "map", "sort", "scatter", "select-and-scatter",
+                                "reduce-window", "all-reduce", "reduce-scatter"):
+                for m in _CALL_ATTR.finditer(ins.attrs):
+                    edges[cname].append((m.group(1), 1))
+                    if ins.opcode == "fusion":
+                        fusion_called.add(m.group(1))
+            elif ins.opcode == "conditional":
+                mb = _BRANCHES.search(ins.attrs)
+                if mb:
+                    for b in _OPND.findall(mb.group(1)):
+                        edges[cname].append((b, 1))
+
+    # entry = computation not called by anyone
+    called = {c for outs in edges.values() for c, _ in outs}
+    entries = [c for c in comps if c not in called]
+    mult: dict[str, float] = collections.defaultdict(float)
+    for e in entries:
+        mult[e] += 1.0
+    # propagate along acyclic call graph (process in discovery order)
+    order = []
+    seen = set()
+
+    def dfs(c):
+        if c in seen:
+            return
+        seen.add(c)
+        for callee, _ in edges.get(c, []):
+            dfs(callee)
+        order.append(c)
+
+    for e in entries:
+        dfs(e)
+    for c in reversed(order):  # callers before callees
+        for callee, trip in edges.get(c, []):
+            mult[callee] += mult[c] * trip
+
+    # root opcode of each computation (to spot in-place DUS fusions)
+    _fusion_root = {}
+    for cname, instrs in comps.items():
+        if instrs:
+            _fusion_root[cname] = instrs[-1].opcode
+
+    def _fusion_param_bytes(callee: str, operands, outer_table) -> float:
+        """Charge fusion operands that are only *sliced* inside the fused
+        computation at slice size, not full-buffer size (a fused
+        dynamic-slice of a loop-carried buffer reads one tile, but the HLO
+        operand is the whole buffer — dominant artifact in tile-scanned
+        attention)."""
+        instrs = comps.get(callee, [])
+        inner = {i.name: i for i in instrs}
+        # param name per operand position
+        pname: dict[int, str] = {}
+        for i in instrs:
+            if i.opcode == "parameter":
+                mnum = re.search(r"parameter\((\d+)\)", i.attrs)
+                if mnum:
+                    pname[int(mnum.group(1))] = i.name
+        # names transparently derived from a given name
+        def derived(root: str) -> set[str]:
+            out = {root}
+            changed = True
+            while changed:
+                changed = False
+                for i in instrs:
+                    if i.name in out:
+                        continue
+                    if i.opcode in ("bitcast", "reshape", "copy", "convert",
+                                    "transpose") and i.operands and \
+                            i.operands[0] in out:
+                        out.add(i.name)
+                        changed = True
+            return out
+
+        total = 0.0
+        for pos, oname in enumerate(operands):
+            full = _bytes_of(outer_table.get(oname, []))
+            if pos not in pname or full < (1 << 22):  # small: charge fully
+                total += full
+                continue
+            aliases = derived(pname[pos])
+            consumers = [i for i in instrs
+                         if any(o in aliases for o in i.operands)
+                         and i.name not in aliases]
+            if consumers and all(c.opcode == "dynamic-slice" for c in consumers):
+                total += sum(_bytes_of(c.result_shapes) for c in consumers)
+            else:
+                total += full
+        return total
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll_bytes = {k: 0.0 for k in COLLECTIVES}
+    coll_count = {k: 0.0 for k in COLLECTIVES}
+    transcendental = 0.0
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_called
+        table = sym[cname]
+        for ins in instrs:
+            if ins.opcode == "dot":
+                mc = _CONTRACT.search(ins.attrs)
+                contracted = 1
+                if mc and ins.operands:
+                    lhs_shapes = table.get(ins.operands[0], [])
+                    if lhs_shapes:
+                        dims = lhs_shapes[0][1]
+                        for di in (int(x) for x in mc.group(1).split(",") if x):
+                            if di < len(dims):
+                                contracted *= dims[di]
+                out_elems = sum(
+                    int.__mul__(1, 1) if not dims else _prod(dims)
+                    for _, dims in ins.result_shapes)
+                flops += m * 2.0 * out_elems * contracted
+            elif ins.opcode in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                                "power", "divide", "erf", "logistic"):
+                transcendental += m * sum(_prod(d) for _, d in ins.result_shapes)
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                ob = sum(_bytes_of(table.get(o, [])) for o in ins.operands)
+                coll_bytes[base] += m * ob
+                coll_count[base] += m
+            if not in_fusion and ins.opcode not in _SKIP_BYTES_OPS:
+                rb = _bytes_of(ins.result_shapes)
+                if ins.opcode == "fusion":
+                    mc = _CALL_ATTR.search(ins.attrs)
+                    callee = mc.group(1) if mc else ""
+                    root = _fusion_root.get(callee, "")
+                    ob = _fusion_param_bytes(callee, ins.operands, table)
+                    if root in ("dynamic-update-slice", "scatter") and ins.operands:
+                        # in-place update fusions alias their big buffer:
+                        # count the slice-sized traffic, not the whole buffer
+                        big = max((_bytes_of(table.get(o, [])) for o in ins.operands),
+                                  default=0)
+                        ob = max(ob - big, 0.0)
+                        rb = min(rb, max(ob, 1.0))
+                elif ins.opcode == "dynamic-update-slice":
+                    # in-place update: traffic = update operand, not the buffer
+                    ob = sum(_bytes_of(table.get(o, [])) for o in ins.operands[1:])
+                    rb = ob
+                elif ins.opcode == "scatter":
+                    # XLA aliases scatter in place: indices + 2x update bytes
+                    ob = sum(_bytes_of(table.get(o, [])) for o in ins.operands[1:])
+                    rb = min(rb, ob)
+                elif ins.opcode == "dynamic-slice":
+                    ob = rb  # reads only the slice
+                elif ins.opcode == "while":
+                    ob = 0   # carries are aliased in place
+                    rb = 0
+                else:
+                    ob = sum(_bytes_of(table.get(o, [])) for o in ins.operands)
+                bytes_acc += m * (rb + ob)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_acc,
+        "transcendental": transcendental,
+        "collective_bytes": coll_bytes,
+        "collective_count": coll_count,
+        "collective_total_bytes": sum(coll_bytes.values()),
+        "n_computations": len(comps),
+        "entries": entries,
+    }
+
+
+def _prod(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n

@@ -1,0 +1,123 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: top byte/flop contributors of a cell's compiled HLO.
+
+    python -m repro.roofline.profile_cell --arch qwen3-32b --shape decode_32k
+"""
+import argparse
+import collections
+
+from . import hlo_parse as HP
+
+
+def top_contributors(text: str, n: int = 16):
+    comps = HP.parse_module(text)
+    sym = {c: {i.name: i.result_shapes for i in instrs}
+           for c, instrs in comps.items()}
+    edges = collections.defaultdict(list)
+    fusion_called: set[str] = set()
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "while":
+                trip = 1
+                mt = HP._TRIP.search(ins.attrs)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = HP._CALL_ATTR.search(ins.attrs)
+                if mb:
+                    edges[cname].append((mb.group(1), trip))
+            elif ins.opcode in ("fusion", "call", "custom-call", "reduce",
+                                "map", "sort", "scatter"):
+                for m2 in HP._CALL_ATTR.finditer(ins.attrs):
+                    edges[cname].append((m2.group(1), 1))
+                    if ins.opcode == "fusion":
+                        fusion_called.add(m2.group(1))
+    called = {c for outs in edges.values() for c, _ in outs}
+    mult = collections.defaultdict(float)
+    for c in comps:
+        if c not in called:
+            mult[c] = 1.0
+    order, seen = [], set()
+
+    def dfs(c):
+        if c in seen:
+            return
+        seen.add(c)
+        for cc, _ in edges.get(c, []):
+            dfs(cc)
+        order.append(c)
+
+    for c in list(mult):
+        dfs(c)
+    for c in reversed(order):
+        for cc, t in edges.get(c, []):
+            mult[cc] += mult[c] * t
+
+    fusion_root = {c: (instrs[-1].opcode if instrs else "")
+                   for c, instrs in comps.items()}
+    top = collections.Counter()
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0 or cname in fusion_called:
+            continue
+        table = sym[cname]
+        for ins in instrs:
+            if ins.opcode in HP._SKIP_BYTES_OPS:
+                continue
+            rb = HP._bytes_of(ins.result_shapes)
+            ob = sum(HP._bytes_of(table.get(o, [])) for o in ins.operands)
+            if ins.opcode == "fusion":
+                mc = HP._CALL_ATTR.search(ins.attrs)
+                root = fusion_root.get(mc.group(1) if mc else "", "")
+                if root in ("dynamic-update-slice", "scatter") and ins.operands:
+                    big = max((HP._bytes_of(table.get(o, []))
+                               for o in ins.operands), default=0)
+                    ob -= big
+                    rb = min(rb, ob)
+            elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                ob = sum(HP._bytes_of(table.get(o, [])) for o in ins.operands[1:])
+                rb = min(rb, ob)
+            elif ins.opcode == "dynamic-slice":
+                ob = rb
+            elif ins.opcode == "while":
+                ob = rb = 0
+            meta = ""
+            mm = HP.re.search(r'op_name="([^"]+)"', ins.attrs)
+            if mm:
+                meta = mm.group(1).split("/")[-1][:40]
+            top[(ins.opcode, cname[-26:], ins.name[-30:], meta)] += m * (rb + ob)
+    return top
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--override", default="")
+    ap.add_argument("--top", type=int, default=16)
+    args = ap.parse_args()
+
+    import json
+    captured = {}
+    orig = HP.analyze_hlo
+
+    def patched(text):
+        captured["text"] = text
+        return orig(text)
+
+    HP.analyze_hlo = patched
+    from repro.launch.dryrun import run_cell
+    overrides = json.loads(args.override) if args.override else None
+    rep = run_cell(args.arch, args.shape, args.mesh, overrides)
+    print(f"memory_s={rep['memory_s']:.3f} collective_s={rep['collective_s']:.3f} "
+          f"compute_s={rep['compute_s']:.3f}")
+    top = top_contributors(captured["text"], args.top)
+    print(f"top {args.top} instructions by bytes (GB):")
+    for (op, c, n, meta), b in top.most_common(args.top):
+        print(f"  {b/1e9:8.1f}  {op:20s} {meta:40s} {c}/{n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report > reports/roofline.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+REPORTS = Path(__file__).resolve().parents[3] / "reports"
+
+
+def load(dirname: str):
+    out = {}
+    d = REPORTS / dirname
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        key = (r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+        out[key] = r
+    return out
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.1f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    return f"{b/1e6:.0f}M"
+
+
+def roofline_table(cells, mesh="single"):
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck | "
+        "MODEL_FLOPS (tot) | useful ratio | roofline frac |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for (arch, shape, m, tag), r in sorted(cells.items()):
+        if m != mesh or tag:
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+            f"| {r['model_flops_total']:.2e} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']*100:.2f}% |")
+    return "\n".join(lines)
+
+
+def dryrun_table(cells):
+    lines = [
+        "| arch | shape | mesh | compile_s | HLO flops/dev | bytes/dev | "
+        "collective bytes/dev | per-kind (count) | temp bytes/dev |",
+        "|---|---|---|---:|---:|---:|---:|---|---:|",
+    ]
+    for (arch, shape, m, tag), r in sorted(cells.items()):
+        if tag:
+            continue
+        kinds = r["collectives"]["per_kind_count"]
+        ks = " ".join(f"{k.split('-')[0][:3]}:{int(v)}"
+                      for k, v in kinds.items() if v)
+        temp = r.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+        lines.append(
+            f"| {arch} | {shape} | {m} | {r['compile_s']:.0f} "
+            f"| {r['flops_per_device']:.2e} | {fmt_bytes(r['bytes_per_device'])} "
+            f"| {fmt_bytes(r['collectives']['total_bytes'])} | {ks} "
+            f"| {fmt_bytes(temp)} |")
+    return "\n".join(lines)
+
+
+def perf_table():
+    cells = load("perf")
+    lines = [
+        "| cell | variant | compute_s | memory_s | collective_s | roofline frac |",
+        "|---|---|---:|---:|---:|---:|",
+    ]
+    for (arch, shape, m, tag), r in sorted(cells.items(),
+                                           key=lambda kv: (kv[0][0], kv[0][1],
+                                                           kv[1]["memory_s"]),
+                                           reverse=False):
+        lines.append(
+            f"| {arch} x {shape} | {tag} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| {r['roofline_fraction']*100:.2f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    cells = load("dryrun")
+    print("## §Dry-run (all cells, single + multi pod)\n")
+    print(dryrun_table(cells))
+    print("\n## §Roofline (single-pod 16x16, 256 chips)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## §Roofline (multi-pod 2x16x16, 512 chips)\n")
+    print(roofline_table(cells, "multi"))
+    print("\n## §Perf variants measured\n")
+    print(perf_table())
+
+
+if __name__ == "__main__":
+    main()

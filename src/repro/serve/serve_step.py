@@ -1,0 +1,26 @@
+"""The pjit-able serving steps: prefill (prompt -> caches) and decode
+(one token against a seq_len KV cache) — what decode_32k / long_500k lower."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def make_prefill_step(cfg, max_len: int):
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(params, cfg, batch, max_len=max_len)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg, greedy: bool = True):
+    def decode_step(params, caches, batch, pos):
+        logits, caches = M.decode_step(params, cfg, caches, batch, pos)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = None
+        return logits, nxt, caches
+    return decode_step

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per assignment: sweep shapes/dtypes and assert_allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.mamba2.kernel import mamba2_ssd_pallas
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+from repro.kernels.token_select.kernel import token_select_pallas
+from repro.kernels.token_select.ref import token_select_ref
+from repro.models.attention import blocked_attention, dense_attention
+from repro.models.rwkv import wkv6_chunked, wkv6_reference
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+
+class TestTokenSelect:
+    @pytest.mark.parametrize("s,j,w", [(1, 4, 1), (3, 8, 4), (8, 32, 8),
+                                       (16, 130, 2)])
+    def test_matches_ref(self, s, j, w):
+        key = jax.random.PRNGKey(s * 100 + j + w)
+        k1, k2, k3 = jax.random.split(key, 3)
+        shares = jax.random.uniform(k1, (s, j))
+        qcount = jax.random.randint(k2, (s, j), 0, 3)
+        u = jax.random.uniform(k3, (s, w))
+        got = token_select_pallas(shares, qcount, u)
+        want = token_select_ref(shares, qcount, u)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_idle_when_no_demand(self):
+        shares = jnp.ones((2, 4)) / 4
+        qcount = jnp.zeros((2, 4), jnp.int32)
+        u = jnp.full((2, 3), 0.5)
+        got = token_select_pallas(shares, qcount, u)
+        assert (np.asarray(got) == -1).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 6), st.integers(2, 40), st.integers(1, 6),
+           st.integers(0, 10_000))
+    def test_property_matches_ref(self, s, j, w, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        shares = jax.random.uniform(k1, (s, j))
+        qcount = jax.random.randint(k2, (s, j), 0, 2)
+        u = jax.random.uniform(k3, (s, w))
+        got = token_select_pallas(shares, qcount, u)
+        want = token_select_ref(shares, qcount, u)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("sq,h,hk,d,win", [
+        (128, 4, 4, 32, 0),       # MHA
+        (256, 8, 2, 64, 0),       # GQA
+        (256, 4, 2, 32, 64),      # sliding window
+        (200, 4, 2, 32, 0),       # ragged (padding path)
+    ])
+    def test_matches_oracle(self, dtype, sq, h, hk, d, win):
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.normal(k1, (2, sq, h, d)).astype(dtype)
+        k = jax.random.normal(k2, (2, sq, hk, d)).astype(dtype)
+        v = jax.random.normal(k3, (2, sq, hk, d)).astype(dtype)
+        got = flash_attention_pallas(q, k, v, causal=True, window=win,
+                                     block_q=64, block_k=64)
+        want = dense_attention(q, k, v, causal=True, window=win)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=tol, rtol=tol)
+
+    def test_matches_blocked_jnp_path(self):
+        key = jax.random.PRNGKey(1)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.normal(k1, (1, 256, 4, 32))
+        k = jax.random.normal(k2, (1, 256, 4, 32))
+        v = jax.random.normal(k3, (1, 256, 4, 32))
+        got = flash_attention_pallas(q, k, v, block_q=128, block_k=64)
+        want = blocked_attention(q, k, v, block_q=128, block_k=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestRWKV6Kernel:
+    @pytest.mark.parametrize("s,h,kd,chunk", [(64, 2, 8, 32), (96, 3, 16, 32),
+                                              (128, 1, 32, 64)])
+    def test_matches_reference(self, s, h, kd, chunk):
+        key = jax.random.PRNGKey(7)
+        ks = jax.random.split(key, 4)
+        b = 2
+        r = jax.random.normal(ks[0], (b, s, h, kd)) * 0.5
+        k = jax.random.normal(ks[1], (b, s, h, kd)) * 0.5
+        v = jax.random.normal(ks[2], (b, s, h, kd)) * 0.5
+        lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, kd)) * 0.5 - 1.5)
+        u = jnp.asarray(np.random.default_rng(0).normal(size=(h, kd)) * 0.1,
+                        jnp.float32)
+        got = wkv6_pallas(r, k, v, lw, u, chunk=chunk)
+        want, _ = wkv6_reference(r, k, v, lw, u)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-3)
+
+    def test_matches_chunked_oracle(self):
+        key = jax.random.PRNGKey(9)
+        ks = jax.random.split(key, 4)
+        r = jax.random.normal(ks[0], (1, 64, 2, 8)) * 0.5
+        k = jax.random.normal(ks[1], (1, 64, 2, 8)) * 0.5
+        v = jax.random.normal(ks[2], (1, 64, 2, 8)) * 0.5
+        lw = -jnp.exp(jax.random.normal(ks[3], (1, 64, 2, 8)) - 1.0)
+        u = jnp.zeros((2, 8))
+        got = wkv6_pallas(r, k, v, lw, u, chunk=32)
+        want, _ = wkv6_chunked(r, k, v, lw, u, chunk=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-3)
+
+
+class TestMamba2Kernel:
+    @pytest.mark.parametrize("s,h,p,n,chunk", [(64, 2, 8, 16, 32),
+                                               (128, 4, 16, 16, 64)])
+    def test_matches_reference(self, s, h, p, n, chunk):
+        key = jax.random.PRNGKey(11)
+        ks = jax.random.split(key, 4)
+        b = 2
+        x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+        a = jax.nn.sigmoid(jax.random.normal(ks[1], (b, s, h))) * 0.5 + 0.45
+        bb = jax.random.normal(ks[2], (b, s, n)) * 0.3
+        c = jax.random.normal(ks[3], (b, s, n)) * 0.3
+        got = mamba2_ssd_pallas(x, a, bb, c, chunk=chunk)
+        want, _ = ssd_reference(x, a, bb, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-3)

@@ -1,0 +1,95 @@
+"""Statistical token selection: draw statistics converge to segment shares."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tokens import opportunity_renorm, segments, select_job
+from repro.core.global_sync import sinkhorn_balance
+
+
+class TestSelection:
+    def test_selection_frequency_matches_shares(self):
+        shares = jnp.asarray([0.5, 0.25, 0.25, 0.0])
+        demand = jnp.asarray([True, True, True, False])
+        key = jax.random.PRNGKey(0)
+        u = jax.random.uniform(key, (20000,))
+        picks = jax.vmap(lambda ui: select_job(shares, demand, ui))(u)
+        freq = np.bincount(np.asarray(picks), minlength=4) / 20000
+        np.testing.assert_allclose(freq[:3], [0.5, 0.25, 0.25], atol=0.02)
+
+    def test_idle_job_never_selected(self):
+        shares = jnp.asarray([0.9, 0.1])
+        demand = jnp.asarray([False, True])
+        u = jnp.linspace(0, 0.999, 100)
+        picks = jax.vmap(lambda ui: select_job(shares, demand, ui))(u)
+        assert (np.asarray(picks) == 1).all()
+
+    def test_no_demand_returns_minus_one(self):
+        shares = jnp.asarray([0.5, 0.5])
+        demand = jnp.asarray([False, False])
+        assert int(select_job(shares, demand, jnp.float32(0.3))) == -1
+
+    def test_batched_over_servers(self):
+        shares = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+        demand = jnp.ones((2, 2), dtype=bool)
+        u = jnp.asarray([0.5, 0.5])
+        picks = select_job(shares, demand, u)
+        assert picks.tolist() == [0, 1]
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(0.0, 10.0), min_size=2, max_size=8),
+           st.lists(st.booleans(), min_size=2, max_size=8),
+           st.floats(0.0, 0.9999))
+    def test_selected_job_always_has_demand(self, w, d, u):
+        n = min(len(w), len(d))
+        shares = jnp.asarray(w[:n], dtype=jnp.float32)
+        demand = jnp.asarray(d[:n])
+        j = int(select_job(shares, demand, jnp.float32(u)))
+        if any(d[:n]):
+            assert j >= 0 and d[j]
+        else:
+            assert j == -1
+
+
+class TestRenorm:
+    def test_renorm_sums_to_one(self):
+        s = opportunity_renorm(jnp.asarray([0.2, 0.3, 0.5]), jnp.asarray([True, False, True]))
+        np.testing.assert_allclose(float(s.sum()), 1.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(s), [2 / 7, 0, 5 / 7], atol=1e-6)
+
+    def test_segments_monotone(self):
+        seg = segments(jnp.asarray([0.1, 0.2, 0.7]))
+        assert (np.diff(np.asarray(seg)) >= 0).all()
+
+
+class TestSinkhorn:
+    def test_fig5_fixed_point(self):
+        support = jnp.asarray([[1.0, 1.0, 0.0], [1.0, 0.0, 1.0]])
+        col = jnp.asarray([0.5, 0.25, 0.25])
+        a = np.asarray(sinkhorn_balance(support, col))
+        np.testing.assert_allclose(a, [[0.5, 0.5, 0.0], [0.5, 0.0, 0.5]], atol=1e-3)
+
+    def test_rows_are_distributions(self):
+        support = jnp.asarray([[1.0, 0.0, 1.0], [1.0, 1.0, 1.0]])
+        col = jnp.asarray([0.2, 0.5, 0.3])
+        a = np.asarray(sinkhorn_balance(support, col))
+        np.testing.assert_allclose(a.sum(axis=1), 1.0, atol=1e-4)
+        assert (a[support == 0] == 0).all()
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 5), st.integers(2, 8), st.integers(0, 10_000))
+    def test_random_support_valid(self, s, j, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        support = (jax.random.uniform(k1, (s, j)) < 0.6).astype(jnp.float32)
+        col = jax.random.uniform(k2, (j,))
+        a = np.asarray(sinkhorn_balance(support, col))
+        assert (a >= -1e-6).all()
+        assert (a[np.asarray(support) == 0] <= 1e-6).all()
+        rows = a.sum(axis=1)
+        reachable = np.asarray(support).sum(axis=1) > 0
+        live_cols = (np.asarray(support).sum(axis=0) > 0) & (np.asarray(col) > 0)
+        if live_cols.any():
+            np.testing.assert_allclose(rows[reachable], 1.0, atol=1e-3)
