@@ -1,23 +1,95 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+Variance-at-scale support: :func:`simulate_batch` runs one workload over many
+PRNG seeds in a single ``vmap``'d compile (``repro.core.run_batch``), and
+:func:`mean_cov` reduces any per-seed metric to the mean ± coefficient of
+variation the paper's statistical claims are stated in.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import EngineConfig, make_workload, metrics, run
+from repro.core import (EngineConfig, get_scheduler, make_workload, metrics,
+                        run, run_batch)
 from repro.core.policy import Policy
+
+DEFAULT_SEEDS = tuple(range(8))
+
+
+def _config(scheduler, jobs, *, policy="job-fair", n_servers=1, **cfg_kw):
+    # Token policies only apply to segment-based schedulers — keyed off the
+    # registry capability, so drop-in schedulers work here unchanged.
+    uses_policy = get_scheduler(scheduler).uses_segments
+    return EngineConfig(
+        n_servers=n_servers, max_jobs=max(8, len(jobs)),
+        scheduler=scheduler,
+        policy=Policy.parse(policy) if uses_policy else None,
+        **cfg_kw)
 
 
 def simulate(scheduler, jobs, seconds, *, policy="job-fair", n_servers=1,
              **cfg_kw):
-    cfg = EngineConfig(
-        n_servers=n_servers, max_jobs=max(8, len(jobs)),
-        scheduler=scheduler,
-        policy=Policy.parse(policy) if scheduler == "themis" else None,
-        **cfg_kw)
+    cfg = _config(scheduler, jobs, policy=policy, n_servers=n_servers, **cfg_kw)
     wl, table = make_workload(cfg, jobs)
     return run(cfg, wl, table, seconds), cfg
+
+
+def simulate_batch(scheduler, jobs, seconds, *, seeds=DEFAULT_SEEDS,
+                   policy="job-fair", n_servers=1, **cfg_kw):
+    """One compile, ``len(seeds)`` simulations; results carry a seed axis."""
+    cfg = _config(scheduler, jobs, policy=policy, n_servers=n_servers, **cfg_kw)
+    wl, table = make_workload(cfg, jobs)
+    return run_batch(cfg, wl, table, seconds, seeds=seeds), cfg
+
+
+def seed_result(batch, k: int) -> dict:
+    """Slice seed ``k`` of a :func:`simulate_batch` result into the per-run
+    dict shape every :mod:`repro.core.metrics` helper expects."""
+    return {
+        "gbps": batch["gbps"][k],
+        "bin_s": batch["bin_s"],
+        "issued": batch["issued"][k],
+        "completed": batch["completed"][k],
+        "dropped": int(batch["dropped"][k]),
+        "ticks": batch["ticks"],
+    }
+
+
+def per_seed(batch) -> list[dict]:
+    return [seed_result(batch, k) for k in range(len(batch["seeds"]))]
+
+
+def seed_metric(batch, fn) -> list[float]:
+    """Evaluate ``fn(result)`` for every seed of a batch."""
+    return [fn(r) for r in per_seed(batch)]
+
+
+def mean_cov(values) -> tuple[float, float]:
+    """Mean and coefficient of variation (std/mean) of a metric across seeds."""
+    a = np.asarray(list(values), dtype=np.float64)
+    m = float(a.mean())
+    return m, (float(a.std() / abs(m)) if m else 0.0)
+
+
+def sweep(variants: dict[str, dict], seconds, *, seeds=DEFAULT_SEEDS):
+    """Config sweep on top of the batch engine.
+
+    ``variants`` maps a label to :func:`simulate_batch` kwargs (``scheduler``,
+    ``jobs``, plus any ``policy``/EngineConfig overrides).  Each variant is
+    one compile over all seeds; returns ``{label: (batch, cfg, seconds_spent)}``.
+    """
+    out = {}
+    for name, kw in variants.items():
+        t0 = time.time()
+        batch, cfg = simulate_batch(seconds=seconds, seeds=seeds, **kw)
+        out[name] = (batch, cfg, time.time() - t0)
+    return out
+
+
+def fmt_stat(mean: float, cov: float, unit: str = "") -> str:
+    return f"{mean:.2f}{unit} cov {cov * 100:.1f}%"
 
 
 def emit(rows):

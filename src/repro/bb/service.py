@@ -3,10 +3,13 @@
 This is the *functional* plane (ordering, correctness, data integrity) that
 the discrete-event engine models the *performance* of.  Every client call is
 a Request carrying job metadata (job id, user, group, node count — §4.1);
-servers queue requests per job and drain them in statistical-token order
-computed by the same ``repro.core`` policy code the engine uses.  A virtual
-clock accounts service time (bytes / bandwidth) so tests can assert both
-ordering statistics and bounded-delay properties without wall-clock sleeps.
+servers queue requests per job and drain them in the order chosen by a
+scheduler from the shared :mod:`repro.core.scheduler` registry — the *same*
+objects the engine runs, so shares and selection provably come from one
+implementation in both planes (themis by default; fifo/gift/tbf plug in via
+``BBCluster(scheduler=...)``).  A virtual clock accounts service time
+(bytes / bandwidth) so tests can assert both ordering statistics and
+bounded-delay properties without wall-clock sleeps.
 
 The client is the POSIX-compliance analogue of the paper's override /
 trampoline interception (§4.4): Python has no glibc to intercept, so the
@@ -23,10 +26,11 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.core.engine import EngineConfig
 from repro.core.job_table import JobTable, make_table
 from repro.core.policy import Policy
 from repro.core.global_sync import sync_segments
-from repro.core.tokens import select_job
+from repro.core.scheduler import Scheduler, TickView, get_scheduler
 from repro.fs.store import FileSystem
 
 import jax.numpy as jnp
@@ -107,22 +111,37 @@ class BBServer:
         elif req.op == "unlink":
             fs.unlink(req.path)
 
-    def pop_order(self, shares: np.ndarray, slot_of: dict[int, int],
-                  key) -> Optional[Request]:
-        """One worker pop: statistical-token draw over per-job queues."""
+    def pop_order(self, sched: Scheduler, cfg: EngineConfig,
+                  shares: np.ndarray, slot_of: dict[int, int],
+                  aux, key) -> Optional[Request]:
+        """One worker pop: delegate the draw to the shared scheduler core.
+
+        ``shares`` is this server's row of the cluster's per-tick share table;
+        ``aux`` is the cluster-wide scheduler state, sliced to this server's
+        row so every Scheduler hook sees the same [S, J] layout as the engine.
+        """
         jobs = sorted(self.queues)
         if not jobs:
             return None
         nslots = len(shares)
-        qcount = np.zeros(nslots, np.int32)
+        qcount = np.zeros((1, nslots), np.int32)
+        head_time = np.full((1, nslots), np.inf, np.float32)
+        req_bytes = np.zeros((nslots,), np.float32)
         for j in jobs:
-            if j in slot_of:
-                qcount[slot_of[j]] = len(self.queues[j])
+            q = self.queues[j]
+            if not q or j not in slot_of:
+                continue
+            slot = slot_of[j]
+            qcount[0, slot] = len(q)
+            head_time[0, slot] = float(q[0].seqno)
+            req_bytes[slot] = float(len(q[0].data) if q[0].data is not None
+                                    else q[0].size)
         if qcount.sum() == 0:
             return None
-        u = float(jax.random.uniform(key, ()))
-        idx = int(select_job(jnp.asarray(shares), jnp.asarray(qcount > 0),
-                             jnp.float32(u)))
+        aux_row = jax.tree.map(lambda x: x[self.sid:self.sid + 1], aux)
+        idx = int(np.asarray(sched.select(
+            cfg, jnp.asarray(shares)[None, :], jnp.asarray(head_time),
+            jnp.asarray(qcount > 0), aux_row, jnp.asarray(req_bytes), key))[0])
         if idx < 0:
             return None
         inv = {v: k for k, v in slot_of.items()}
@@ -131,23 +150,38 @@ class BBServer:
 
 
 class BBCluster:
-    """A group of I/O nodes + the λ-sync controller loop."""
+    """A group of I/O nodes + the λ-sync controller loop.
+
+    ``scheduler`` names any entry in the :mod:`repro.core.scheduler` registry;
+    the cluster drives drain order through that shared object, exactly as the
+    performance-plane engine does.
+    """
 
     def __init__(self, n_servers: int = 2, *, policy: str | Policy = "size-fair",
-                 n_workers: int = 8, bandwidth: float = 22e9,
-                 max_jobs: int = 32, lam_s: float = 0.5, seed: int = 0,
-                 stripes: int = 1):
+                 scheduler: str = "themis", n_workers: int = 8,
+                 bandwidth: float = 22e9, max_jobs: int = 32,
+                 lam_s: float = 0.5, seed: int = 0, stripes: int = 1):
         self.fs = FileSystem(n_servers, default_stripes=stripes)
         self.servers = [BBServer(s, self.fs, n_workers=n_workers,
                                  bandwidth=bandwidth) for s in range(n_servers)]
         self.policy = Policy.parse(policy) if isinstance(policy, str) else policy
+        self.sched = get_scheduler(scheduler)
+        self.cfg = EngineConfig(
+            n_servers=n_servers, max_jobs=max_jobs, n_workers=n_workers,
+            server_bw=bandwidth, scheduler=scheduler, policy=self.policy,
+            seed=seed)
+        self.aux = self.sched.init_aux(n_servers, max_jobs)
         self.max_jobs = max_jobs
         self.lam_s = lam_s
         self.clock = 0.0
         self.last_sync = -1e9
+        self._last_interval = -1e9
         self._key = jax.random.PRNGKey(seed)
         self._seq = itertools.count()
         self.slot_of: dict[int, int] = {}
+        self._synced = np.zeros((max_jobs,), bool)
+        self._table_cache: Optional[JobTable] = None
+        self._table_key: Optional[tuple] = None
 
     def _slot(self, job_id: int) -> int:
         if job_id not in self.slot_of:
@@ -157,17 +191,21 @@ class BBCluster:
         return self.slot_of[job_id]
 
     def _table(self) -> JobTable:
-        jobs = [None] * self.max_jobs
         metas = {}
         for srv in self.servers:
             metas.update(srv.known_jobs)
-        specs = []
         ordered = sorted(self.slot_of.items(), key=lambda kv: kv[1])
+        rows = []
         for job_id, slot in ordered:
             m = metas.get(job_id, JobMeta(job_id))
-            specs.append({"user": m.user, "group": m.group, "size": m.size,
-                          "priority": m.priority})
-        return make_table(specs, max_jobs=self.max_jobs)
+            rows.append((job_id, slot, m.user, m.group, m.size, m.priority))
+        key = tuple(rows)
+        if key != self._table_key:
+            specs = [{"user": u, "group": g, "size": sz, "priority": p}
+                     for _, _, u, g, sz, p in rows]
+            self._table_cache = make_table(specs, max_jobs=self.max_jobs)
+            self._table_key = key
+        return self._table_cache
 
     def sync(self):
         """λ-sync: all-gather demand, Sinkhorn-balance global shares (§3.1)."""
@@ -179,6 +217,7 @@ class BBCluster:
         segs = np.asarray(sync_segments(self.policy, table, jnp.asarray(demand)))
         for si, srv in enumerate(self.servers):
             srv.segments = segs[si]
+        self._synced = demand.any(axis=0)
         self.last_sync = self.clock
 
     def submit(self, req: Request):
@@ -196,31 +235,82 @@ class BBCluster:
             sid = self.fs.ring.server_of(req.path)
         self.servers[sid].submit(req)
 
+    def _tick_view(self) -> TickView:
+        """Snapshot the Python-side queues into the plane-agnostic TickView."""
+        s_, j_ = len(self.servers), self.max_jobs
+        qcount = np.zeros((s_, j_), np.int32)
+        known = np.zeros((s_, j_), bool)
+        seg = np.zeros((s_, j_), np.float32)
+        for si, srv in enumerate(self.servers):
+            for j in srv.known_jobs:
+                if j in self.slot_of:
+                    known[si, self.slot_of[j]] = True
+            for j, n in srv.demand().items():
+                qcount[si, self._slot(j)] = n
+            if srv.segments is not None:
+                seg[si] = srv.segments
+        return TickView(
+            qcount=jnp.asarray(qcount), known=jnp.asarray(known),
+            seg=jnp.asarray(seg), synced=jnp.asarray(self._synced),
+            live=jnp.ones((j_,), bool))
+
     def drain(self) -> list[Request]:
         """Process every queued request in scheduler order; returns them in
         global completion order (the observable the paper's policies shape)."""
         done: list[Request] = []
+        cfg, sched = self.cfg, self.sched
+        mu_s = cfg.gift_mu_ticks * cfg.dt
+        stalls = 0
         while True:
-            if self.clock - self.last_sync >= self.lam_s:
+            if sched.uses_segments and (
+                    self.clock - self.last_sync >= self.lam_s
+                    or any(s.segments is None for s in self.servers)):
                 self.sync()
+            view = self._tick_view()
+            if int(view.qcount.sum()) == 0:
+                break
+            # μ-interval bookkeeping: the functional plane has no fixed tick,
+            # so refill/update fire when the virtual clock passes a boundary.
+            if self.clock - self._last_interval >= mu_s:
+                elapsed = (mu_s if self._last_interval < -1e8
+                           else self.clock - self._last_interval)
+                self.aux = sched.refill(cfg, self.aux, float(elapsed))
+                self.aux = sched.interval_update(cfg, self.aux, view.qcount)
+                self._last_interval = self.clock
+            shares = np.asarray(sched.tick_shares(cfg, self._table(), view))
             progressed = False
             for srv in self.servers:
-                if srv.segments is None:
-                    self.sync()
                 for w in range(srv.n_workers):
                     self._key, sub = jax.random.split(self._key)
-                    req = srv.pop_order(srv.segments, self.slot_of, sub)
+                    req = srv.pop_order(sched, cfg, shares[srv.sid],
+                                        self.slot_of, self.aux, sub)
                     if req is None:
                         continue
                     progressed = True
+                    slot = self.slot_of[req.job.job_id]
+                    nbytes = float(len(req.data) if req.data is not None
+                                   else req.size)
+                    self.aux = sched.charge(cfg, self.aux, srv.sid, slot, nbytes)
                     srv._execute(req)
                     t0 = max(srv.worker_free[w], self.clock)
-                    srv.worker_free[w] = t0 + srv._service(req)
+                    srv.worker_free[w] = (t0 + srv._service(req)
+                                          + sched.ctrl_overhead_s(cfg))
                     req.done_at = srv.worker_free[w]
                     srv.processed.append((req.done_at, req.job.job_id, req.op))
                     done.append(req)
             if not progressed:
+                # Interval schedulers may throttle (budgets exhausted mid-μ):
+                # jump the virtual clock to the next boundary so the next
+                # round recomputes budgets.  A stalled interval serves
+                # nothing, so the second recompute always frees spare quota;
+                # two consecutive fruitless jumps means a request no quota
+                # can ever admit, and only then do we give up.
+                if sched.has_intervals and stalls < 2:
+                    stalls += 1
+                    self.clock = self._last_interval + mu_s
+                    continue
                 break
+            stalls = 0
             self.clock = max(self.clock, min(s.worker_free.min()
                                              for s in self.servers))
         done.sort(key=lambda r: r.done_at)

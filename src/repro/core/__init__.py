@@ -5,5 +5,7 @@ from .policy import Policy, Level, job_fair, size_fair, user_fair, priority_fair
 from .job_table import JobTable, make_table, empty_table, merge_tables
 from .tokens import opportunity_renorm, segments, select_job
 from .global_sync import sinkhorn_balance, sync_segments, local_segments, global_shares
-from .engine import EngineConfig, Workload, make_workload, run
+from .scheduler import (Scheduler, TickView, available_schedulers,
+                        get_scheduler, register)
+from .engine import EngineConfig, Workload, make_workload, run, run_batch
 from . import baselines, metrics

@@ -5,6 +5,13 @@ TBF's HTC + PSSB strategies *into* ThemisIO's substrate — these run inside
 our engine, sharing its queues, workers and measurement plane, so the
 comparison isolates the allocation algorithm.
 
+This module holds only the *pure allocation math* (interval updates, select
+rules, account charges).  The stateful orchestration — when a μ elapses, how
+token refills accrue, which accounts to debit — lives in the Scheduler
+objects of :mod:`repro.core.scheduler`, the single registry both the
+performance plane (``core.engine``) and the functional plane (``bb.service``)
+consume.
+
 Modeling notes (recorded per DESIGN.md §2; all constants are calibrated and
 overridable in EngineConfig):
 
@@ -62,23 +69,22 @@ def fifo_select(head_time: jnp.ndarray, demand: jnp.ndarray) -> jnp.ndarray:
 
 # -- GIFT -------------------------------------------------------------------
 
-def gift_interval_update(aux: AuxState, qcount, t, mu_ticks: int, dt: float,
-                         server_bw: float, coupon_frac: float) -> AuxState:
-    """Every μ: BSIP — split the interval's bytes over jobs in proportion to
-    their pending I/O; redeem coupons; bank a fraction of unserved budget."""
-    def update(aux):
-        pending = qcount.astype(jnp.float32)
-        tot = jnp.maximum(pending.sum(axis=1, keepdims=True), 1.0)
-        fair = server_bw * mu_ticks * dt * pending / tot
-        unserved = jnp.maximum(aux.budget, 0.0)
-        redeemed = aux.coupons
-        banked = coupon_frac * unserved * (pending > 0)
-        return aux._replace(
-            budget=fair + redeemed,
-            coupons=banked,
-            served=jnp.zeros_like(aux.served),
-        )
-    return jax.lax.cond(jnp.mod(t, mu_ticks) == 0, update, lambda a: a, aux)
+def gift_interval(aux: AuxState, qcount, mu_s: float, server_bw: float,
+                  coupon_frac: float) -> AuxState:
+    """One μ boundary: BSIP — split the interval's bytes over jobs in
+    proportion to their pending I/O; redeem coupons; bank a fraction of
+    unserved budget.  Unconditional — callers decide when a μ has elapsed."""
+    pending = qcount.astype(jnp.float32)
+    tot = jnp.maximum(pending.sum(axis=1, keepdims=True), 1.0)
+    fair = server_bw * mu_s * pending / tot
+    unserved = jnp.maximum(aux.budget, 0.0)
+    redeemed = aux.coupons
+    banked = coupon_frac * unserved * (pending > 0)
+    return aux._replace(
+        budget=fair + redeemed,
+        coupons=banked,
+        served=jnp.zeros_like(aux.served),
+    )
 
 
 def gift_select(aux: AuxState, demand: jnp.ndarray, key) -> jnp.ndarray:
@@ -95,17 +101,15 @@ def tbf_refill(aux: AuxState, rate: float, dt: float, burst: float) -> AuxState:
     return aux._replace(bucket=jnp.minimum(aux.bucket + rate * dt, burst))
 
 
-def tbf_interval_update(aux: AuxState, t, mu_ticks: int, dt: float,
-                        server_bw: float, rate: float,
-                        headroom: float) -> AuxState:
-    """Every μ: PSSB — estimate spare bandwidth from the previous interval's
-    guaranteed-rate consumption, discounted by a safety headroom."""
-    def update(aux):
-        cap_bytes = server_bw * mu_ticks * dt
-        guaranteed = jnp.minimum(aux.served, rate * mu_ticks * dt).sum(axis=1)
-        spare = headroom * jnp.maximum(cap_bytes - guaranteed, 0.0)
-        return aux._replace(spare=spare, served=jnp.zeros_like(aux.served))
-    return jax.lax.cond(jnp.mod(t, mu_ticks) == 0, update, lambda a: a, aux)
+def tbf_interval(aux: AuxState, mu_s: float, server_bw: float, rate: float,
+                 headroom: float) -> AuxState:
+    """One μ boundary: PSSB — estimate spare bandwidth from the previous
+    interval's guaranteed-rate consumption, discounted by a safety headroom.
+    Unconditional — callers decide when a μ has elapsed."""
+    cap_bytes = server_bw * mu_s
+    guaranteed = jnp.minimum(aux.served, rate * mu_s).sum(axis=1)
+    spare = headroom * jnp.maximum(cap_bytes - guaranteed, 0.0)
+    return aux._replace(spare=spare, served=jnp.zeros_like(aux.served))
 
 
 def tbf_select(aux: AuxState, demand: jnp.ndarray, req_bytes, key) -> jnp.ndarray:
@@ -126,23 +130,25 @@ def tbf_select(aux: AuxState, demand: jnp.ndarray, req_bytes, key) -> jnp.ndarra
 
 # -- shared -----------------------------------------------------------------
 
-def charge(scheduler: str, aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
-    """Debit the scheduler's account for a pop of `add_bytes` at (s, j_sel)."""
-    if scheduler == "gift":
-        return aux._replace(
-            budget=aux.budget.at[srv_idx, j_sel].add(-add_bytes),
-            served=aux.served.at[srv_idx, j_sel].add(add_bytes))
-    if scheduler == "tbf":
-        # Guaranteed tokens are consumed first; the remainder draws on the
-        # spare quota (PSSB) while HTC lets the bucket run negative.
-        have = jnp.maximum(aux.bucket[srv_idx, j_sel], 0.0)
-        from_bucket = jnp.minimum(add_bytes, have)
-        from_spare = add_bytes - from_bucket
-        return aux._replace(
-            bucket=aux.bucket.at[srv_idx, j_sel].add(-from_bucket),
-            spare=aux.spare.at[srv_idx].add(-from_spare),
-            served=aux.served.at[srv_idx, j_sel].add(add_bytes))
-    return aux
+def gift_charge(aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
+    """Debit the GIFT interval budget for a pop of `add_bytes` at (s, j_sel)."""
+    return aux._replace(
+        budget=aux.budget.at[srv_idx, j_sel].add(-add_bytes),
+        served=aux.served.at[srv_idx, j_sel].add(add_bytes))
+
+
+def tbf_charge(aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
+    """Debit the TBF bucket for a pop of `add_bytes` at (s, j_sel).
+
+    Guaranteed tokens are consumed first; the remainder draws on the spare
+    quota (PSSB) while HTC lets the bucket run negative."""
+    have = jnp.maximum(aux.bucket[srv_idx, j_sel], 0.0)
+    from_bucket = jnp.minimum(add_bytes, have)
+    from_spare = add_bytes - from_bucket
+    return aux._replace(
+        bucket=aux.bucket.at[srv_idx, j_sel].add(-from_bucket),
+        spare=aux.spare.at[srv_idx].add(-from_spare),
+        served=aux.served.at[srv_idx, j_sel].add(add_bytes))
 
 
 def _weighted_pick(w: jnp.ndarray, key) -> jnp.ndarray:

@@ -7,15 +7,13 @@ thinks, repeats).  All state lives in fixed-shape jnp arrays; one simulated
 tick is a pure function and the whole run is a single ``jax.lax.scan`` — the
 entire testbed jit-compiles.
 
-Schedulers:
-  * ``themis`` — statistical tokens (paper §3): per-tick local policy chain +
-    λ-synced Sinkhorn-balanced global segments, opportunity renormalization,
-    per-worker uniform draws.
-  * ``fifo``   — arrival-order across jobs (production default, paper §1).
-  * ``gift``   — BSIP equal-share with μ-interval budgets + throttle-and-
-    reward coupons (paper §5.4 reference re-implementation).
-  * ``tbf``    — per-job token bucket (user-supplied rate) with HTC hard
-    compensation and PSSB proportional spare sharing (paper §5.4).
+Scheduling is pluggable: ``EngineConfig.scheduler`` names an entry in the
+:mod:`repro.core.scheduler` registry (``themis``, ``fifo``, ``gift``, ``tbf``
+ship with the repo) and the engine only ever talks to the Scheduler interface
+— ``pre_tick`` for bookkeeping, ``tick_shares`` for the per-tick share table,
+``select`` for the per-worker draw, ``charge`` to debit accounts.  The same
+objects drive the functional plane (:mod:`repro.bb.service`), so both planes
+provably run one scheduling algorithm.
 
 Time-accounting note: workers may start a request mid-tick (start = max(free
 time, tick start)), so tick quantization does not waste bandwidth; the paper
@@ -31,10 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import baselines
-from .global_sync import local_segments, sync_segments
+from .global_sync import sync_segments
 from .job_table import JobTable, make_table
 from .policy import Policy
-from .tokens import opportunity_renorm, select_job
+from .scheduler import TickView, get_scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +99,7 @@ class EngineState(NamedTuple):
     issued: jnp.ndarray       # i32[J]
     completed: jnp.ndarray    # i32[J]
     idle_worker_ticks: jnp.ndarray  # i32[] workers idle while demand existed
+    dropped: jnp.ndarray      # i32[] arrivals rejected by full rings
 
 
 def make_workload(
@@ -155,57 +154,37 @@ def init_state(cfg: EngineConfig, n_bins: int) -> EngineState:
         known=jnp.zeros((s_, j_), dtype=bool),
         seg=jnp.zeros((s_, j_), jnp.float32),
         synced=jnp.zeros((j_,), dtype=bool),
-        aux=baselines.init_aux(s_, j_),
+        aux=get_scheduler(cfg.scheduler).init_aux(s_, j_),
         bytes_bin=jnp.zeros((j_, n_bins), jnp.float32),
         issued=jnp.zeros((j_,), jnp.int32),
         completed=jnp.zeros((j_,), jnp.int32),
         idle_worker_ticks=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
     )
 
 
 def _push_arrivals(state: EngineState, arrivals: jnp.ndarray, t_sec) -> EngineState:
-    """Append `arrivals[s,j]` identically-timestamped requests to each ring."""
+    """Append `arrivals[s,j]` identically-timestamped requests to each ring.
+
+    Arrivals beyond the ring's remaining capacity are rejected (not wrapped —
+    wrapping would overwrite live entries and corrupt their arrival stamps)
+    and tallied in ``EngineState.dropped`` so runs can assert zero loss.
+    """
     cap = state.arr_time.shape[-1]
+    space = jnp.maximum(cap - state.qcount, 0)
+    accepted = jnp.minimum(arrivals, space)
     idx = jnp.arange(cap, dtype=jnp.int32)[None, None, :]
     tail = (state.head + state.qcount)[..., None]
     pos = (idx - tail) % cap
-    mask = pos < arrivals[..., None]
+    mask = pos < accepted[..., None]
     arr_time = jnp.where(mask, jnp.float32(t_sec), state.arr_time)
     return state._replace(
         arr_time=arr_time,
-        qcount=state.qcount + arrivals,
-        known=state.known | (arrivals > 0),
-        issued=state.issued + arrivals.sum(axis=0).astype(jnp.int32),
+        qcount=state.qcount + accepted,
+        known=state.known | (accepted > 0),
+        issued=state.issued + accepted.sum(axis=0).astype(jnp.int32),
+        dropped=state.dropped + (arrivals - accepted).sum().astype(jnp.int32),
     )
-
-
-def _themis_tick_shares(cfg: EngineConfig, table: JobTable, state: EngineState,
-                        live: jnp.ndarray) -> jnp.ndarray:
-    """Selection shares for this tick: λ-synced segments where available,
-    per-server local policy chain for not-yet-synced jobs (paper: tokens are
-    assigned from real-time traffic; sync only corrects the global view)."""
-    demand = state.qcount > 0
-    local = local_segments(cfg.policy, table, state.known & live & demand)
-    base = jnp.where(state.synced[None, :], state.seg, local)
-    # If nothing from either source has mass but demand exists, fall back to
-    # the local chain entirely (e.g. all-new jobs right after a sync).
-    has_mass = (opportunity_renorm(base, demand).sum(axis=1) > 0)[:, None]
-    return jnp.where(has_mass, base, local)
-
-
-def _select(cfg: EngineConfig, wl: Workload, shares, head_time, state_q, aux, key):
-    """Dispatch to the scheduler's per-draw selection rule. Returns int32[S]."""
-    demand = state_q > 0
-    if cfg.scheduler == "themis":
-        u = jax.random.uniform(key, (shares.shape[0],))
-        return select_job(shares, demand, u)
-    if cfg.scheduler == "fifo":
-        return baselines.fifo_select(head_time, demand)
-    if cfg.scheduler == "gift":
-        return baselines.gift_select(aux, demand, key)
-    if cfg.scheduler == "tbf":
-        return baselines.tbf_select(aux, demand, wl.req_bytes, key)
-    raise ValueError(f"unknown scheduler {cfg.scheduler}")
 
 
 def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
@@ -213,6 +192,8 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
     cap, h_ = cfg.ring_cap, cfg.wheel
     worker_bw = cfg.worker_bw
     srv_idx = jnp.arange(s_, dtype=jnp.int32)
+    sched = get_scheduler(cfg.scheduler)
+    ctrl = sched.ctrl_overhead_s(cfg)
 
     def tick(state: EngineState, _):
         t = state.t
@@ -227,22 +208,10 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
         state = _push_arrivals(state, arrivals, t_sec)
 
         # -- 2. scheduler bookkeeping --------------------------------------
-        aux = state.aux
-        if cfg.scheduler == "gift":
-            aux = baselines.gift_interval_update(
-                aux, state.qcount, t, cfg.gift_mu_ticks, cfg.dt,
-                cfg.server_bw, cfg.gift_coupon_frac)
-        elif cfg.scheduler == "tbf":
-            aux = baselines.tbf_refill(
-                aux, cfg.tbf_rate_eff(), cfg.dt,
-                cfg.tbf_rate_eff() * cfg.tbf_burst_s)
-            aux = baselines.tbf_interval_update(
-                aux, t, cfg.gift_mu_ticks, cfg.dt, cfg.server_bw,
-                cfg.tbf_rate_eff(), cfg.tbf_headroom)
-        shares = (
-            _themis_tick_shares(cfg, table, state, live)
-            if cfg.scheduler == "themis" else jnp.zeros((s_, j_), jnp.float32)
-        )
+        aux = sched.pre_tick(cfg, state.aux, state.qcount, t)
+        shares = sched.tick_shares(cfg, table, TickView(
+            qcount=state.qcount, known=state.known, seg=state.seg,
+            synced=state.synced, live=live))
 
         # -- 3. workers: sequential pops within the tick --------------------
         key, sub = jax.random.split(state.key)
@@ -260,15 +229,14 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
                 demand,
                 jnp.take_along_axis(arr_time, (head % cap)[..., None], axis=-1)[..., 0],
                 jnp.inf)
-            j_sel = _select(cfg, wl, shares, head_time, qcount, aux, kw)
+            j_sel = sched.select(cfg, shares, head_time, demand, aux,
+                                 wl.req_bytes, kw)
             valid = free & (j_sel >= 0)
             j_safe = jnp.maximum(j_sel, 0)
             onehot = jax.nn.one_hot(j_safe, j_, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
             qcount = qcount - onehot
             head = jnp.mod(head + onehot, cap)
             rb = wl.req_bytes[j_safe]
-            ctrl = {"gift": cfg.gift_ctrl_overhead_s,
-                    "tbf": cfg.tbf_ctrl_overhead_s}.get(cfg.scheduler, 0.0)
             service = rb / worker_bw + wl.overhead_s[j_safe] + ctrl
             start_t = jnp.maximum(free_at[:, w], t_sec)
             new_free = jnp.where(valid, start_t + service, free_at[:, w])
@@ -283,7 +251,7 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
             add_b = jnp.where(valid, rb, 0.0)
             bytes_job = bytes_job.at[j_safe].add(add_b)
             pops_job = pops_job.at[j_safe].add(valid.astype(jnp.int32))
-            aux = baselines.charge(cfg.scheduler, aux, srv_idx, j_safe, add_b)
+            aux = sched.charge(cfg, aux, srv_idx, j_safe, add_b)
             idle_ticks = idle_ticks + (free & ~valid & demand.any(axis=1)).sum().astype(jnp.int32)
             return (qcount, head, arr_time, wheel, free_at, aux, bytes_job,
                     pops_job, idle_ticks), None
@@ -304,7 +272,7 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
         )
 
         # -- 4. λ-delayed global fairness sync ------------------------------
-        if cfg.scheduler == "themis" and cfg.sync_ticks > 0:
+        if sched.uses_segments and cfg.sync_ticks > 0:
             def do_sync(st: EngineState) -> EngineState:
                 support = st.known & live[None, :]
                 seg = sync_segments(cfg.policy, table, support,
@@ -340,5 +308,45 @@ def run(cfg: EngineConfig, wl: Workload, table: JobTable, sim_seconds: float):
         "bin_s": bin_s,
         "issued": np.asarray(state.issued),
         "completed": np.asarray(state.completed),
+        "dropped": int(state.dropped),
+        "ticks": ticks,
+    }
+
+
+def run_batch(cfg: EngineConfig, wl: Workload, table: JobTable,
+              sim_seconds: float, *, seeds: Sequence[int]):
+    """Run the simulation once per PRNG seed, vmapped — one compile for all.
+
+    Every seed shares the workload, table, and config; only the PRNG stream
+    differs, so the whole batch is ``vmap`` over the initial key and each lane
+    is bit-identical to a sequential :func:`run` with ``cfg.seed = s``.  All
+    returned arrays carry a leading ``len(seeds)`` axis; use it to report
+    mean + coefficient-of-variation (the paper's variance-at-scale claims)
+    from a single compile.
+    """
+    seeds = list(seeds)
+    ticks = int(round(sim_seconds / cfg.dt))
+    n_bins = max(1, (ticks + cfg.bin_ticks - 1) // cfg.bin_ticks)
+    tick = make_tick(cfg, wl, table, n_bins)
+    base = init_state(cfg, n_bins)
+
+    @jax.jit
+    def _run_all(seed_arr):
+        def one(seed):
+            st = base._replace(key=jax.random.PRNGKey(seed))
+            st, _ = jax.lax.scan(tick, st, None, length=ticks)
+            return st
+        return jax.vmap(one)(seed_arr)
+
+    state = _run_all(jnp.asarray(seeds, dtype=jnp.uint32))
+    bin_s = cfg.bin_ticks * cfg.dt
+    return {
+        "state": state,
+        "seeds": np.asarray(seeds),
+        "gbps": np.asarray(state.bytes_bin) / bin_s / 1e9,   # [K, J, NB]
+        "bin_s": bin_s,
+        "issued": np.asarray(state.issued),                  # [K, J]
+        "completed": np.asarray(state.completed),            # [K, J]
+        "dropped": np.asarray(state.dropped),                # [K]
         "ticks": ticks,
     }

@@ -1,0 +1,222 @@
+"""Pluggable scheduler core — the seam shared by both planes.
+
+A :class:`Scheduler` bundles everything an allocation algorithm needs to run
+inside either plane of the reproduction:
+
+  * the **performance plane** (:mod:`repro.core.engine`), where every hook is
+    traced into a single jitted ``lax.scan`` over simulation ticks, and
+  * the **functional plane** (:mod:`repro.bb.service`), where the burst-buffer
+    service calls the same hooks eagerly per drain round.
+
+The interface is four array-level hooks plus two bookkeeping knobs:
+
+  ``init_aux(S, J)``            scheduler-private state (:class:`AuxState`)
+  ``pre_tick(cfg, aux, q, t)``  per-tick bookkeeping (refills, μ budgets)
+  ``tick_shares(cfg, table, view)``  f32[S, J] selection shares for this tick
+  ``select(cfg, shares, head_time, demand, aux, req_bytes, key)`` → i32[S]
+  ``charge(cfg, aux, s, j, bytes)``  debit accounts after a pop
+  ``ctrl_overhead_s(cfg)``      fixed per-request control-path cost
+
+All hooks take plain arrays (no engine state), so one implementation serves
+both planes.  Shapes: ``S`` servers, ``J`` job slots; every per-server hook
+operates row-wise, so a plane may pass a single-row slice.
+
+Register a new scheduler with the decorator and it becomes addressable from
+``EngineConfig(scheduler=...)`` and ``BBCluster(scheduler=...)`` alike::
+
+    from repro.core.scheduler import Scheduler, register
+
+    @register("my-sched")
+    class MyScheduler(Scheduler):
+        def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+            ...  # return int32[S] job per server, -1 to idle
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from . import baselines
+from .baselines import AuxState
+from .global_sync import local_segments
+from .job_table import JobTable
+from .tokens import select_job, shares_have_mass
+
+
+class TickView(NamedTuple):
+    """Plane-agnostic snapshot of the queue/segment state feeding a tick.
+
+    The engine builds it from :class:`EngineState`; the burst-buffer service
+    builds it from its Python-side queues.  Either way the scheduler sees the
+    same five arrays.
+    """
+
+    qcount: jnp.ndarray   # i32[S, J]  queued requests per (server, job)
+    known: jnp.ndarray    # bool[S, J] job has ever issued I/O on the server
+    seg: jnp.ndarray      # f32[S, J]  λ-synced segment table
+    synced: jnp.ndarray   # bool[J]    job was included in the last λ-sync
+    live: jnp.ndarray     # bool[J]    job is inside its arrival window
+
+
+class Scheduler:
+    """Base scheduler: idles on select, carries no aux state of its own."""
+
+    name: str = ""
+    uses_segments: bool = False   # participates in the λ-sync segment exchange
+    has_intervals: bool = False   # needs μ-interval budget updates to progress
+
+    # -- state ---------------------------------------------------------------
+    def init_aux(self, n_servers: int, max_jobs: int) -> AuxState:
+        return baselines.init_aux(n_servers, max_jobs)
+
+    def ctrl_overhead_s(self, cfg) -> float:
+        """Fixed per-request control-path cost charged to service time."""
+        return 0.0
+
+    # -- per-tick bookkeeping ------------------------------------------------
+    def refill(self, cfg, aux: AuxState, dt_s: float) -> AuxState:
+        """Continuous accrual over ``dt_s`` seconds (token-bucket refills)."""
+        return aux
+
+    def interval_update(self, cfg, aux: AuxState, qcount) -> AuxState:
+        """One μ boundary: recompute interval budgets/quotas. Unconditional —
+        the engine fires it every ``gift_mu_ticks``; the functional plane
+        fires it when its virtual clock passes a μ."""
+        return aux
+
+    def pre_tick(self, cfg, aux: AuxState, qcount, t) -> AuxState:
+        """Engine path: accrue one tick, then a μ update on the boundary."""
+        return aux
+
+    # -- selection -----------------------------------------------------------
+    def tick_shares(self, cfg, table: JobTable, view: TickView) -> jnp.ndarray:
+        """f32[S, J] shares driving ``select`` this tick (zeros if unused)."""
+        return jnp.zeros_like(view.seg)
+
+    def select(self, cfg, shares, head_time, demand, aux: AuxState,
+               req_bytes, key) -> jnp.ndarray:
+        """Pick one job per server row; int32[S], -1 idles the worker."""
+        raise NotImplementedError
+
+    def charge(self, cfg, aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
+        """Debit the scheduler's accounts for a pop of ``add_bytes``."""
+        return aux
+
+
+class _IntervalScheduler(Scheduler):
+    """Shared engine-path cadence for μ-interval schedulers (GIFT, TBF)."""
+
+    has_intervals = True
+
+    def pre_tick(self, cfg, aux: AuxState, qcount, t) -> AuxState:
+        aux = self.refill(cfg, aux, cfg.dt)
+        return jax.lax.cond(
+            jnp.mod(t, cfg.gift_mu_ticks) == 0,
+            lambda a: self.interval_update(cfg, a, qcount),
+            lambda a: a, aux)
+
+
+_REGISTRY: Dict[str, Scheduler] = {}
+
+
+def register(name: str) -> Callable[[Type[Scheduler]], Type[Scheduler]]:
+    """Class decorator: instantiate and expose the scheduler under ``name``."""
+    def deco(cls: Type[Scheduler]) -> Type[Scheduler]:
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_scheduler(name: str) -> Scheduler:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_schedulers() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# The four schedulers the paper evaluates (§3, §5.4).
+# ---------------------------------------------------------------------------
+
+@register("themis")
+class ThemisScheduler(Scheduler):
+    """Statistical tokens (paper §3): per-tick local policy chain + λ-synced
+    Sinkhorn-balanced global segments, opportunity renormalization, per-worker
+    uniform draws."""
+
+    uses_segments = True
+
+    def tick_shares(self, cfg, table: JobTable, view: TickView) -> jnp.ndarray:
+        demand = view.qcount > 0
+        local = local_segments(cfg.policy, table,
+                               view.known & view.live[None, :] & demand)
+        base = jnp.where(view.synced[None, :], view.seg, local)
+        # If nothing from either source has mass but demand exists, fall back
+        # to the local chain entirely (e.g. all-new jobs right after a sync).
+        has_mass = shares_have_mass(base, demand)[:, None]
+        return jnp.where(has_mass, base, local)
+
+    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+        u = jax.random.uniform(key, (shares.shape[0],))
+        return select_job(shares, demand, u)
+
+
+@register("fifo")
+class FifoScheduler(Scheduler):
+    """Arrival-order across jobs (production default, paper §1)."""
+
+    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+        return baselines.fifo_select(head_time, demand)
+
+
+@register("gift")
+class GiftScheduler(_IntervalScheduler):
+    """BSIP equal-share with μ-interval budgets + throttle-and-reward coupons
+    (paper §5.4 reference re-implementation)."""
+
+    def ctrl_overhead_s(self, cfg) -> float:
+        return cfg.gift_ctrl_overhead_s
+
+    def interval_update(self, cfg, aux, qcount):
+        return baselines.gift_interval(
+            aux, qcount, cfg.gift_mu_ticks * cfg.dt, cfg.server_bw,
+            cfg.gift_coupon_frac)
+
+    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+        return baselines.gift_select(aux, demand, key)
+
+    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+        return baselines.gift_charge(aux, srv_idx, j_sel, add_bytes)
+
+
+@register("tbf")
+class TbfScheduler(_IntervalScheduler):
+    """Per-job token bucket (user-supplied rate) with HTC hard compensation
+    and PSSB proportional spare sharing (paper §5.4)."""
+
+    def ctrl_overhead_s(self, cfg) -> float:
+        return cfg.tbf_ctrl_overhead_s
+
+    def refill(self, cfg, aux, dt_s):
+        rate = cfg.tbf_rate_eff()
+        return baselines.tbf_refill(aux, rate, dt_s, rate * cfg.tbf_burst_s)
+
+    def interval_update(self, cfg, aux, qcount):
+        return baselines.tbf_interval(
+            aux, cfg.gift_mu_ticks * cfg.dt, cfg.server_bw,
+            cfg.tbf_rate_eff(), cfg.tbf_headroom)
+
+    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+        return baselines.tbf_select(aux, demand, req_bytes, key)
+
+    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+        return baselines.tbf_charge(aux, srv_idx, j_sel, add_bytes)

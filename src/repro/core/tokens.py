@@ -25,6 +25,15 @@ def opportunity_renorm(shares: jnp.ndarray, demand: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(total > 0, masked / jnp.maximum(total, 1e-30), 0.0)
 
 
+def shares_have_mass(shares: jnp.ndarray, demand: jnp.ndarray) -> jnp.ndarray:
+    """bool[...]: does any *demanded* job carry positive share mass?
+
+    Schedulers use this to decide whether a share table can drive a draw or a
+    fallback (e.g. the local policy chain) is needed for this tick.
+    """
+    return opportunity_renorm(shares, demand).sum(axis=-1) > 0
+
+
 def segments(shares: jnp.ndarray) -> jnp.ndarray:
     """Cumulative segment boundaries over [0, 1]; last entry == total mass."""
     return jnp.cumsum(shares, axis=-1)

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.mamba2.kernel import mamba2_ssd_pallas

@@ -2,7 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core.policy import Level, Policy, compute_job_shares_from_table, transition_matrices
 from repro.core.job_table import make_table

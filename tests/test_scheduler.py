@@ -1,0 +1,202 @@
+"""Pluggable scheduler seam: registry, batch engine, cross-plane equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bb.service import BBClient, BBCluster, JobMeta
+from repro.core import (EngineConfig, make_workload, metrics, run, run_batch)
+from repro.core.engine import _push_arrivals, init_state
+from repro.core.job_table import make_table
+from repro.core.policy import Policy
+from repro.core.scheduler import (Scheduler, TickView, available_schedulers,
+                                  get_scheduler, register)
+
+
+def simulate(scheduler, jobs, seconds=10.0, policy="job-fair", **cfg_kw):
+    cfg = EngineConfig(
+        n_servers=cfg_kw.pop("n_servers", 1), max_jobs=8,
+        scheduler=scheduler,
+        policy=Policy.parse(policy) if scheduler == "themis" else None,
+        **cfg_kw)
+    wl, table = make_workload(cfg, jobs)
+    return run(cfg, wl, table, seconds), cfg
+
+
+class TestRegistry:
+    def test_paper_schedulers_registered(self):
+        assert {"themis", "fifo", "gift", "tbf"} <= set(available_schedulers())
+
+    def test_unknown_scheduler_raises(self):
+        with pytest.raises(ValueError, match="unknown scheduler"):
+            get_scheduler("nope")
+
+    def test_only_themis_uses_segments(self):
+        assert get_scheduler("themis").uses_segments
+        assert not get_scheduler("fifo").uses_segments
+
+    def test_custom_scheduler_runs_in_engine(self):
+        """A drop-in registration is addressable from EngineConfig with no
+        engine changes — the seam future schedulers (AdapTBF, plan-based)
+        plug into."""
+
+        @register("always-first")
+        class AlwaysFirst(Scheduler):
+            def select(self, cfg, shares, head_time, demand, aux, req_bytes,
+                       key):
+                first = jnp.argmax(demand.astype(jnp.int32), axis=-1)
+                return jnp.where(demand.any(axis=-1), first, -1).astype(
+                    jnp.int32)
+
+        jobs = [dict(size=1, procs=8, req_mb=10, end_s=1),
+                dict(size=1, procs=8, req_mb=10, end_s=1)]
+        res, _ = simulate("always-first", jobs, seconds=1.0, n_workers=4)
+        assert res["completed"][0] > 0
+        # strict priority: the lower slot is served whenever it has demand
+        assert res["completed"][0] >= res["completed"][1]
+
+
+class TestThemisZeroMassFallback:
+    def test_all_new_jobs_after_sync_get_local_chain_shares(self):
+        """Jobs that appeared after the last λ-sync (synced segments empty)
+        must still draw shares from the local policy chain."""
+        table = make_table([dict(size=4), dict(size=1)], max_jobs=4)
+        cfg = EngineConfig(n_servers=1, max_jobs=4,
+                           policy=Policy.parse("size-fair"))
+        view = TickView(
+            qcount=jnp.asarray([[3, 3, 0, 0]], jnp.int32),
+            known=jnp.asarray([[True, True, False, False]]),
+            seg=jnp.zeros((1, 4), jnp.float32),        # stale sync: no mass
+            synced=jnp.asarray([True, True, False, False]),
+            live=jnp.ones((4,), bool))
+        shares = np.asarray(get_scheduler("themis").tick_shares(
+            cfg, table, view))
+        assert shares[0].sum() == pytest.approx(1.0, abs=1e-5)
+        assert shares[0, 0] / shares[0, 1] == pytest.approx(4.0, rel=1e-4)
+
+    def test_synced_segments_win_when_they_have_mass(self):
+        table = make_table([dict(size=4), dict(size=1)], max_jobs=4)
+        cfg = EngineConfig(n_servers=1, max_jobs=4,
+                           policy=Policy.parse("size-fair"))
+        seg = jnp.asarray([[0.3, 0.7, 0.0, 0.0]], jnp.float32)
+        view = TickView(
+            qcount=jnp.asarray([[3, 3, 0, 0]], jnp.int32),
+            known=jnp.asarray([[True, True, False, False]]),
+            seg=seg,
+            synced=jnp.asarray([True, True, False, False]),
+            live=jnp.ones((4,), bool))
+        shares = np.asarray(get_scheduler("themis").tick_shares(
+            cfg, table, view))
+        np.testing.assert_allclose(shares, np.asarray(seg), atol=1e-6)
+
+
+class TestRingOverflow:
+    def test_overflow_is_clamped_and_counted(self):
+        cfg = EngineConfig(n_servers=1, max_jobs=2, ring_cap=4, wheel=8)
+        state = init_state(cfg, n_bins=1)
+        state = _push_arrivals(
+            state, jnp.asarray([[6, 0]], jnp.int32), 0.0)
+        assert int(state.qcount[0, 0]) == 4      # clamped at ring capacity
+        assert int(state.dropped) == 2
+        assert int(state.issued[0]) == 4         # only accepted count as issued
+        state = _push_arrivals(
+            state, jnp.asarray([[1, 2]], jnp.int32), 1e-3)
+        assert int(state.qcount[0, 0]) == 4      # full ring rejects everything
+        assert int(state.qcount[0, 1]) == 2      # other job unaffected
+        assert int(state.dropped) == 3
+
+    def test_normal_runs_drop_nothing(self):
+        res, _ = simulate("themis", [dict(size=1, procs=16, req_mb=10,
+                                          end_s=2)], seconds=2.0)
+        assert res["dropped"] == 0
+
+
+class TestRunBatch:
+    JOBS = [dict(user=0, size=1, procs=8, req_mb=10, end_s=1),
+            dict(user=1, size=1, procs=4, req_mb=10, end_s=1)]
+
+    def test_batched_seeds_match_sequential_runs_bitwise(self):
+        """The acceptance bar: vmapped per-seed lanes are bit-identical to
+        eight sequential run() calls with the same seeds."""
+        cfg = EngineConfig(n_servers=1, max_jobs=8, n_workers=4,
+                           scheduler="themis",
+                           policy=Policy.parse("job-fair"))
+        wl, table = make_workload(cfg, self.JOBS)
+        seeds = list(range(8))
+        batch = run_batch(cfg, wl, table, 1.0, seeds=seeds)
+        assert batch["gbps"].shape[0] == 8
+        for k, s in enumerate(seeds):
+            res = run(dataclasses.replace(cfg, seed=s), wl, table, 1.0)
+            for key in ("gbps", "issued", "completed"):
+                np.testing.assert_array_equal(batch[key][k], res[key])
+
+    def test_seeds_actually_differ(self):
+        cfg = EngineConfig(n_servers=1, max_jobs=8, n_workers=4,
+                           scheduler="themis",
+                           policy=Policy.parse("job-fair"))
+        wl, table = make_workload(cfg, self.JOBS)
+        batch = run_batch(cfg, wl, table, 1.0, seeds=[0, 1])
+        assert not np.array_equal(batch["gbps"][0], batch["gbps"][1])
+
+
+class TestCrossPlaneEquivalence:
+    def test_completion_proportions_match_engine(self):
+        """Same size-fair workload through the functional plane (BBCluster)
+        and the performance plane (engine) yields matching per-job completion
+        proportions — both planes run the one shared scheduler core."""
+        # engine: two closed-loop jobs, sizes 4 and 1
+        jobs = [dict(user=0, size=4, procs=28, req_mb=10, end_s=6),
+                dict(user=1, size=1, procs=28, req_mb=10, end_s=6)]
+        res, _ = simulate("themis", jobs, seconds=6, policy="size-fair")
+        g0 = metrics.median_gbps(res, 0, 2, 5)
+        g1 = metrics.median_gbps(res, 1, 2, 5)
+        engine_share = g0 / (g0 + g1)
+
+        # functional plane: same job mix, equal-size queued requests
+        cluster = BBCluster(n_servers=1, policy="size-fair", seed=0)
+        big = BBClient(cluster, JobMeta(job_id=1, size=4), autodrain=False)
+        small = BBClient(cluster, JobMeta(job_id=2, size=1), autodrain=False)
+        big.open("/big", "w")
+        small.open("/small", "w")
+        cluster.drain()
+        n = 400
+        for i in range(n):
+            big._req("write", "/big", offset=i * 10, data=b"a" * 10)
+            small._req("write", "/small", offset=i * 10, data=b"b" * 10)
+        done = cluster.drain()
+        first = done[:n]  # window where both queues are non-empty
+        c1 = sum(1 for r in first if r.job.job_id == 1)
+        bb_share = c1 / n
+
+        assert bb_share == pytest.approx(engine_share, abs=0.1)
+
+
+class TestFunctionalPlaneSchedulers:
+    def test_fifo_preserves_submission_order(self):
+        cluster = BBCluster(n_servers=1, n_workers=1, scheduler="fifo",
+                            policy="job-fair")
+        a = BBClient(cluster, JobMeta(job_id=1), autodrain=False)
+        b = BBClient(cluster, JobMeta(job_id=2), autodrain=False)
+        a.open("/a", "w")
+        b.open("/b", "w")
+        cluster.drain()
+        for i in range(20):
+            a._req("write", "/a", offset=i * 4, data=b"x" * 4)
+            b._req("write", "/b", offset=i * 4, data=b"y" * 4)
+        done = cluster.drain()
+        seqs = [r.seqno for r in done]
+        assert seqs == sorted(seqs)
+
+    @pytest.mark.parametrize("sched", ["gift", "tbf"])
+    def test_interval_schedulers_drain_to_completion(self, sched):
+        cluster = BBCluster(n_servers=1, scheduler=sched, policy="job-fair")
+        c = BBClient(cluster, JobMeta(job_id=5), autodrain=False)
+        c.open("/g", "w")
+        for i in range(30):
+            c._req("write", "/g", offset=i * 8, data=b"z" * 8)
+        done = cluster.drain()
+        assert len(done) == 31  # create + 30 writes
+        f = BBClient(cluster, JobMeta(job_id=5)).open("/g")
+        assert f.read(8) == b"z" * 8

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core.tokens import opportunity_renorm, segments, select_job
 from repro.core.global_sync import sinkhorn_balance
