@@ -9,7 +9,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.policy import Policy
 from repro.core.job_table import make_table

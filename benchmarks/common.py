@@ -5,17 +5,27 @@ PRNG seeds in a single ``vmap``'d compile (``repro.core.run_batch``), and
 :func:`mean_cov` reduces any per-seed metric to the mean ± coefficient of
 variation the paper's statistical claims are stated in.
 """
-from __future__ import annotations
-
+import os
 import time
 
 import numpy as np
 
-from repro.core import (EngineConfig, get_scheduler, make_workload, metrics,
+from repro.core import (EngineConfig, get_scheduler, make_workload,
                         run, run_batch)
 from repro.core.policy import Policy
 
 DEFAULT_SEEDS = tuple(range(8))
+
+
+def bench_seconds(default: float = 60.0) -> float:
+    """Simulated duration; ``BENCH_SECONDS`` overrides (CI smoke runs ≤5 s)."""
+    return float(os.environ.get("BENCH_SECONDS", default))
+
+
+def bench_seeds(default=DEFAULT_SEEDS) -> tuple:
+    """Seed set; ``BENCH_SEEDS=n`` overrides with ``range(n)`` (CI smoke: 2)."""
+    n = int(os.environ.get("BENCH_SEEDS", "0"))
+    return tuple(range(n)) if n > 0 else tuple(default)
 
 
 def _config(scheduler, jobs, *, policy="job-fair", n_servers=1, **cfg_kw):

@@ -1,12 +1,15 @@
 """Benchmark harness: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (assignment format).
+Prints ``name,us_per_call,derived`` CSV (assignment format); ``--json PATH``
+additionally writes the same rows as a JSON document so CI can archive
+per-commit perf-trajectory artifacts (``BENCH_*.json``).
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig12      # one section
+    PYTHONPATH=src python -m benchmarks.run fig12 --json BENCH_fig12.json
 """
-from __future__ import annotations
-
+import json
+import os
 import sys
 
 from .bench_apps import run_fig13
@@ -30,13 +33,37 @@ SECTIONS = {
 
 
 def main() -> None:
-    want = sys.argv[1:] or list(SECTIONS)
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--json requires a path argument") from None
+        argv = argv[:i] + argv[i + 2:]
+    want = argv or list(SECTIONS)
+    all_rows: dict[str, list] = {}
     print("name,us_per_call,derived")
     for name in want:
         key = next((k for k in SECTIONS if name.startswith(k)), None)
         if key is None:
             raise SystemExit(f"unknown section {name}; have {list(SECTIONS)}")
-        emit(SECTIONS[key]())
+        rows = SECTIONS[key]()
+        emit(rows)
+        all_rows[key] = [
+            {"name": n, "us_per_call": us, "derived": derived}
+            for n, us, derived in rows]
+    if json_path:
+        doc = {
+            "sections": all_rows,
+            "env": {k: os.environ[k] for k in
+                    ("BENCH_SECONDS", "BENCH_SEEDS", "JAX_PLATFORMS")
+                    if k in os.environ},
+        }
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ interferer under FIFO and size-fair, printing throughput timelines.
 """
 import numpy as np
 
-from repro.core import EngineConfig, make_workload, metrics, run
+from repro.core import EngineConfig, make_workload, run
 from repro.core.policy import Policy
 
 

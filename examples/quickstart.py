@@ -3,7 +3,6 @@ policy-scheduled ThemisIO burst buffer.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 
 from repro.bb.service import BBClient, BBCluster, JobMeta
 from repro.ckpt.manager import CheckpointManager

@@ -6,8 +6,9 @@ a Request carrying job metadata (job id, user, group, node count — §4.1);
 servers queue requests per job and drain them in the order chosen by a
 scheduler from the shared :mod:`repro.core.scheduler` registry — the *same*
 objects the engine runs, so shares and selection provably come from one
-implementation in both planes (themis by default; fifo/gift/tbf plug in via
-``BBCluster(scheduler=...)``).  A virtual clock accounts service time
+implementation in both planes (themis by default; any name in
+``available_schedulers()`` — fifo, gift, tbf, adaptbf, plan, or a drop-in —
+plugs in via ``BBCluster(scheduler=...)``).  A virtual clock accounts service time
 (bytes / bandwidth) so tests can assert both ordering statistics and
 bounded-delay properties without wall-clock sleeps.
 

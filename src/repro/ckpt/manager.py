@@ -19,7 +19,7 @@ import hashlib
 import io
 import json
 import os
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

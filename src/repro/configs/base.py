@@ -14,7 +14,6 @@ shared across invocations), ``rwkv`` (RWKV-6 time-mix + channel-mix),
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 

@@ -1,9 +1,14 @@
-"""Reference schedulers the paper compares against (§5.4): FIFO, GIFT, TBF.
+"""Reference schedulers the paper compares against, plus adaptive competitors.
 
 Like the paper — which ported GIFT's BSIP + throttle-and-reward core and
-TBF's HTC + PSSB strategies *into* ThemisIO's substrate — these run inside
-our engine, sharing its queues, workers and measurement plane, so the
-comparison isolates the allocation algorithm.
+TBF's HTC + PSSB strategies *into* ThemisIO's substrate (§5.4) — these run
+inside our engine, sharing its queues, workers and measurement plane, so the
+comparison isolates the allocation algorithm.  Beyond the paper's FIFO /
+GIFT / TBF trio, this module also carries the two adaptive competitors from
+PAPERS.md: AdapTBF's decentralized adaptive token borrowing
+(arXiv:2602.22409) and Kopanski & Rzadca's plan-based scheduling
+(arXiv:2109.00082), so the statistical-token claims are stressed against
+schedulers that *do* adapt online.
 
 This module holds only the *pure allocation math* (interval updates, select
 rules, account charges).  The stateful orchestration — when a μ elapses, how
@@ -34,6 +39,29 @@ overridable in EngineConfig):
     sawtooth.  The rule-engine admission path is a fixed per-request control
     overhead (`tbf_ctrl_overhead_s`).
 
+  * AdapTBF (Rashid & Dai): classful token buckets like TBF, but every μ the
+    servers run a decentralized borrow exchange — jobs whose buckets exceed
+    their estimated interval demand donate the surplus; jobs whose demand
+    exceeds their bucket borrow from the pooled surplus via a waterfilling
+    match (smallest deficits are levelled first).  Borrowed tokens are a
+    ledger (``AuxState.borrowed``), not a gift: each μ a repayment fraction
+    is clawed back out of the borrower's bucket and re-offered to the pool
+    (token mass is conserved — repaid tokens recirculate, they are never
+    destroyed) while the debt decays, so long-lived demand imbalances
+    re-equilibrate instead of ratcheting.
+    Structural effects captured: near-work-conserving admission without a
+    central coordinator, one-μ borrowing lag, repayment sawtooth.
+  * Plan-based (Kopanski & Rzadca): adapted from batch-job planning to the
+    per-request drain loop — every μ the scheduler rebuilds an execution
+    plan from an EFT-style estimate of each job's remaining demand (an EMA
+    over ``qcount`` history, ``AuxState.ema``); within the interval jobs are
+    served in plan order (smallest estimated remaining demand first — the
+    earliest-finish-time order under symmetric service rates), each up to
+    its planned allowance (``AuxState.plan``).  When the plan has no
+    eligible entry the scheduler degrades to FIFO, so new jobs are never
+    blocked on estimation lag.  Structural effects captured: lookahead
+    favouring short jobs, μ-grained plan staleness, estimator warm-up.
+
 ThemisIO's own per-request cost is the statistical token draw, which the
 paper measures at ~1 µs (§5.3.1) — negligible at 10 MB request granularity.
 """
@@ -49,14 +77,18 @@ class AuxState(NamedTuple):
     budget: jnp.ndarray      # f32[S, J] GIFT per-interval byte budget
     coupons: jnp.ndarray     # f32[S, J] GIFT carried reward
     served: jnp.ndarray      # f32[S, J] bytes served this interval (GIFT+TBF)
-    bucket: jnp.ndarray      # f32[S, J] TBF tokens (bytes; negative under HTC)
+    bucket: jnp.ndarray      # f32[S, J] TBF/AdapTBF tokens (bytes; can go negative)
     spare: jnp.ndarray       # f32[S]    TBF spare-bandwidth quota this interval
+    borrowed: jnp.ndarray    # f32[S, J] AdapTBF outstanding borrowed tokens
+    ema: jnp.ndarray         # f32[S, J] plan: qcount-history EMA (requests)
+    plan: jnp.ndarray        # f32[S, J] plan: per-μ serving allowance (requests)
 
 
 def init_aux(n_servers: int, max_jobs: int) -> AuxState:
     z = jnp.zeros((n_servers, max_jobs), jnp.float32)
     return AuxState(budget=z, coupons=z, served=z, bucket=z,
-                    spare=jnp.zeros((n_servers,), jnp.float32))
+                    spare=jnp.zeros((n_servers,), jnp.float32),
+                    borrowed=z, ema=z, plan=z)
 
 
 # -- FIFO -------------------------------------------------------------------
@@ -126,6 +158,133 @@ def tbf_select(aux: AuxState, demand: jnp.ndarray, req_bytes, key) -> jnp.ndarra
     pick_adm = _weighted_pick(w_adm, key)
     pick_spare = _weighted_pick(w_spare, jax.random.fold_in(key, 1))
     return jnp.where(any_adm, pick_adm, pick_spare)
+
+
+# -- AdapTBF ----------------------------------------------------------------
+
+def adaptbf_refill(aux: AuxState, rate: float, dt: float,
+                   burst: float) -> AuxState:
+    """Continuous accrual like TBF, but never clawing back borrowed tokens:
+    a bucket lifted above the burst cap by a borrow grant stays there until
+    it is spent or repaid — only the *refill* saturates at the cap."""
+    refilled = jnp.minimum(aux.bucket + rate * dt, burst)
+    return aux._replace(bucket=jnp.maximum(aux.bucket, refilled))
+
+
+def waterfill(deficit: jnp.ndarray, pool: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized waterfilling: grants ``min(deficit, L)`` per row, with the
+    common level ``L`` chosen so the row's grants sum to ``min(pool, Σdeficit)``.
+
+    ``deficit``: f32[..., J] non-negative;  ``pool``: f32[...].  Levelling the
+    smallest deficits first is the borrower half of AdapTBF's donor/borrower
+    match; it is also the classic max-min fair split of the donated surplus.
+    """
+    d = jnp.maximum(deficit, 0.0)
+    j_ = d.shape[-1]
+    ds = jnp.sort(d, axis=-1)
+    cs = jnp.cumsum(ds, axis=-1)
+    # Water consumed if the level sits exactly at the i-th smallest deficit.
+    used_at = cs + ds * (j_ - 1 - jnp.arange(j_, dtype=d.dtype))
+    pool = jnp.maximum(pool, 0.0)
+    k = jnp.sum(used_at < pool[..., None], axis=-1)          # fully-levelled
+    csk = jnp.where(
+        k > 0,
+        jnp.take_along_axis(cs, jnp.maximum(k - 1, 0)[..., None], axis=-1)[..., 0],
+        0.0)
+    level = (pool - csk) / jnp.maximum(j_ - k, 1).astype(d.dtype)
+    level = jnp.where(k >= j_, jnp.inf, jnp.maximum(level, 0.0))
+    return jnp.minimum(d, level[..., None])
+
+
+def adaptbf_interval(aux: AuxState, qcount, mu_s: float, server_bw: float,
+                     repay_frac: float) -> AuxState:
+    """One μ boundary of the decentralized borrow exchange.
+
+    Each server (row) estimates every job's interval demand from its pending
+    queue (BSIP-style share of the interval's bytes), repays a fraction of
+    outstanding debt out of borrower buckets (repayment decay), then matches
+    donors — buckets above their demand estimate — to borrowers via a
+    waterfilling step over the pooled surplus.  Unconditional — callers
+    decide when a μ has elapsed."""
+    pending = qcount.astype(jnp.float32)
+    tot = jnp.maximum(pending.sum(axis=1, keepdims=True), 1.0)
+    need = server_bw * mu_s * pending / tot
+    # Repayment decay: the debt ledger shrinks and the repaid tokens are
+    # *offered back to the pool* — never destroyed.  If no peer currently
+    # wants them (pool under-consumed) they stay with the repayer, so
+    # repayment is a no-op on an idle server and token mass is conserved:
+    # every byte taken below is a byte granted.
+    repay = repay_frac * jnp.maximum(aux.borrowed, 0.0)
+    # Donor/borrower match: pool the donatable tokens (surplus over the
+    # demand estimate, plus the repayment tranche), waterfill the deficits.
+    donatable = jnp.maximum(aux.bucket - repay - need, 0.0) + repay
+    deficit = jnp.maximum(need - (aux.bucket - repay), 0.0)
+    pool = donatable.sum(axis=1)
+    grant = waterfill(deficit, pool)
+    take_frac = grant.sum(axis=1) / jnp.maximum(pool, 1e-30)
+    bucket = aux.bucket - donatable * take_frac[:, None] + grant
+    # The ledger shrinks only by what actually left the bucket (the taken
+    # share of the repay tranche): if no peer wanted the tokens they stayed
+    # with the borrower, and so does the debt.
+    borrowed = aux.borrowed - repay * take_frac[:, None] + grant
+    return aux._replace(bucket=bucket, borrowed=borrowed,
+                        served=jnp.zeros_like(aux.served))
+
+
+def adaptbf_select(aux: AuxState, demand: jnp.ndarray, req_bytes,
+                   key) -> jnp.ndarray:
+    """Admit jobs whose (possibly borrowed-into) bucket covers the request,
+    weighted by bucket depth; idle otherwise.  There is no PSSB side-channel:
+    spare bandwidth moves *into* buckets at μ boundaries instead."""
+    covered = demand & (aux.bucket >= req_bytes[None, :])
+    w = jnp.where(covered, jnp.maximum(aux.bucket, 1.0), 0.0)
+    return _weighted_pick(w, key)
+
+
+def adaptbf_charge(aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
+    """Debit the bucket for a pop of ``add_bytes`` at (s, j_sel).  Several
+    workers may admit against the same bucket within one tick, so the bucket
+    may transiently go negative — which simply blocks the job until refill
+    or the next borrow round (HTC-style hard accounting)."""
+    return aux._replace(
+        bucket=aux.bucket.at[srv_idx, j_sel].add(-add_bytes),
+        served=aux.served.at[srv_idx, j_sel].add(add_bytes))
+
+
+# -- plan-based -------------------------------------------------------------
+
+def plan_interval(aux: AuxState, qcount, ema_alpha: float) -> AuxState:
+    """One μ boundary: refresh the remaining-demand estimator and rebuild the
+    execution plan.  The estimator is an EMA over ``qcount`` history (in
+    requests); the plan grants each job an allowance equal to its estimate,
+    consumed as pops happen.  Unconditional — callers decide when a μ has
+    elapsed."""
+    pending = qcount.astype(jnp.float32)
+    ema = ema_alpha * pending + (1.0 - ema_alpha) * aux.ema
+    return aux._replace(ema=ema, plan=ema,
+                        served=jnp.zeros_like(aux.served))
+
+
+def plan_select(aux: AuxState, head_time: jnp.ndarray,
+                demand: jnp.ndarray) -> jnp.ndarray:
+    """Serve in plan order: among demanded jobs with allowance left, pick the
+    smallest estimated remaining demand — the earliest-finish-time order
+    under symmetric service rates.  An empty plan (fresh jobs, exhausted
+    allowances) degrades to FIFO so estimation lag never blocks service."""
+    eligible = demand & (aux.plan > 0.0)
+    score = jnp.where(eligible, aux.ema, jnp.inf)
+    j = jnp.argmin(score, axis=-1).astype(jnp.int32)
+    return jnp.where(eligible.any(axis=-1), j,
+                     fifo_select(head_time, demand))
+
+
+def plan_charge(aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
+    """Consume one unit of plan allowance per pop (the plan is kept in
+    requests; ``add_bytes > 0`` marks a real pop)."""
+    pop = jnp.asarray(add_bytes > 0, aux.plan.dtype)
+    return aux._replace(
+        plan=aux.plan.at[srv_idx, j_sel].add(-pop),
+        served=aux.served.at[srv_idx, j_sel].add(add_bytes))
 
 
 # -- shared -----------------------------------------------------------------

@@ -8,8 +8,9 @@ tick is a pure function and the whole run is a single ``jax.lax.scan`` — the
 entire testbed jit-compiles.
 
 Scheduling is pluggable: ``EngineConfig.scheduler`` names an entry in the
-:mod:`repro.core.scheduler` registry (``themis``, ``fifo``, ``gift``, ``tbf``
-ship with the repo) and the engine only ever talks to the Scheduler interface
+:mod:`repro.core.scheduler` registry (``available_schedulers()`` — ``themis``,
+``fifo``, ``gift``, ``tbf``, ``adaptbf``, ``plan`` ship with the repo) and
+the engine only ever talks to the Scheduler interface
 — ``pre_tick`` for bookkeeping, ``tick_shares`` for the per-tick share table,
 ``select`` for the per-worker draw, ``charge`` to debit accounts.  The same
 objects drive the functional plane (:mod:`repro.bb.service`), so both planes
@@ -45,11 +46,15 @@ class EngineConfig:
     wheel: int = 4096            # future-arrival time-wheel horizon (ticks)
     ring_cap: int = 512          # per (server, job) arrival-time ring
     bin_ticks: int = 100         # throughput bin (100 ms at dt=1 ms)
-    scheduler: str = "themis"    # themis | fifo | gift | tbf
+    # Any name in repro.core.scheduler.available_schedulers() — the registry,
+    # not this comment, is the source of truth for what can run here.
+    scheduler: str = "themis"
     policy: Optional[Policy] = None
     sync_ticks: int = 500        # λ in ticks; 0 disables sync (local-only view)
     sinkhorn_iters: int = 32
-    # GIFT reference parameters (§5.4: μ = 0.5 s works best on our substrate)
+    # μ interval in ticks — despite the historical name this is the cadence
+    # for EVERY interval scheduler (gift, tbf, adaptbf, plan: budget resets,
+    # borrow exchanges, replanning).  §5.4: μ = 0.5 s works best here.
     gift_mu_ticks: int = 500
     gift_coupon_frac: float = 0.5
     gift_ctrl_overhead_s: float = 5e-4   # BSIP pause/resume + progress sync per request
@@ -58,6 +63,14 @@ class EngineConfig:
     tbf_burst_s: float = 0.25    # bucket depth in seconds of rate
     tbf_headroom: float = 0.8    # PSSB conservative spare-estimation factor
     tbf_ctrl_overhead_s: float = 5.5e-4  # rule-engine admission cost per request
+    # AdapTBF parameters (decentralized adaptive token borrowing; shares
+    # tbf_rate_eff() so TBF vs AdapTBF isolates the borrowing mechanism)
+    adaptbf_burst_s: float = 1.0         # bucket depth in seconds of rate
+    adaptbf_repay: float = 0.25          # per-μ repayment decay on borrowed tokens
+    adaptbf_ctrl_overhead_s: float = 1e-4  # no rule engine: local bucket ops only
+    # plan-based scheduler parameters
+    plan_ema_alpha: float = 0.3          # qcount-history EMA weight per μ
+    plan_ctrl_overhead_s: float = 2e-4   # per-request share of plan construction
     # Fabric model for multi-server scaling (calibrated to paper Fig. 7:
     # efficiency ~ S^-0.08 => 82% at 8 servers, 68% at 128).
     fabric_exponent: float = 0.0

@@ -29,7 +29,6 @@ vmapped over servers, and run inside the discrete-event engine's `lax.scan`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

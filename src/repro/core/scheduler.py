@@ -144,7 +144,8 @@ def available_schedulers() -> tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
-# The four schedulers the paper evaluates (§3, §5.4).
+# The registry ships six schedulers: the four the paper evaluates (§3, §5.4)
+# plus the two adaptive competitors from PAPERS.md (AdapTBF, plan-based).
 # ---------------------------------------------------------------------------
 
 @register("themis")
@@ -220,3 +221,52 @@ class TbfScheduler(_IntervalScheduler):
 
     def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
         return baselines.tbf_charge(aux, srv_idx, j_sel, add_bytes)
+
+
+@register("adaptbf")
+class AdaptbfScheduler(_IntervalScheduler):
+    """AdapTBF (arXiv:2602.22409): per-job token buckets that *borrow* unused
+    tokens from under-demanding peers each μ — a decentralized waterfilling
+    match of donor surplus to borrower deficits, with repayment decay on the
+    borrowed ledger.  Shares TBF's per-job rate (``tbf_rate_eff``) so the two
+    differ only in what happens to unused entitlement."""
+
+    def ctrl_overhead_s(self, cfg) -> float:
+        return cfg.adaptbf_ctrl_overhead_s
+
+    def refill(self, cfg, aux, dt_s):
+        rate = cfg.tbf_rate_eff()
+        return baselines.adaptbf_refill(aux, rate, dt_s,
+                                        rate * cfg.adaptbf_burst_s)
+
+    def interval_update(self, cfg, aux, qcount):
+        return baselines.adaptbf_interval(
+            aux, qcount, cfg.gift_mu_ticks * cfg.dt, cfg.server_bw,
+            cfg.adaptbf_repay)
+
+    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+        return baselines.adaptbf_select(aux, demand, req_bytes, key)
+
+    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+        return baselines.adaptbf_charge(aux, srv_idx, j_sel, add_bytes)
+
+
+@register("plan")
+class PlanScheduler(_IntervalScheduler):
+    """Plan-based lookahead (arXiv:2109.00082, adapted to the request drain
+    loop): every μ rebuild an execution plan from an EFT-style estimate of
+    each job's remaining demand (EMA over qcount history) and serve jobs in
+    plan order — smallest estimated remaining demand first — falling back to
+    FIFO whenever the plan has no eligible entry."""
+
+    def ctrl_overhead_s(self, cfg) -> float:
+        return cfg.plan_ctrl_overhead_s
+
+    def interval_update(self, cfg, aux, qcount):
+        return baselines.plan_interval(aux, qcount, cfg.plan_ema_alpha)
+
+    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+        return baselines.plan_select(aux, head_time, demand)
+
+    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+        return baselines.plan_charge(aux, srv_idx, j_sel, add_bytes)

@@ -15,7 +15,7 @@ loader is:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Optional
 
 import numpy as np
 

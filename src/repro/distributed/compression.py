@@ -13,11 +13,9 @@ tests/test_distributed.py (loss curve tracks the fp32 all-reduce run).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def quantize_int8(x: jnp.ndarray):

@@ -19,11 +19,8 @@ per-arch specs; per-arch overrides stay possible via ``rules`` kwargs.
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

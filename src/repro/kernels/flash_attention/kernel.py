@@ -15,7 +15,6 @@ ref.py / repro.models.attention.blocked_attention is the oracle.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ math; also what `repro.core.tokens.select_job` uses).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 repro.core.tokens.select_job, vectorized over workers)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ from __future__ import annotations
 import re
 from typing import Any
 
-import numpy as np
 
 PEAK_FLOPS = 197e12     # bf16 per chip
 HBM_BW = 819e9          # bytes/s per chip

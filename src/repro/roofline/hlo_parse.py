@@ -22,9 +22,7 @@ modules in tests/test_roofline.py.
 from __future__ import annotations
 
 import collections
-import json
 import re
-from typing import Iterator
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -2,7 +2,6 @@
 (one token against a seq_len KV cache) — what decode_32k / long_500k lower."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import model as M

@@ -11,7 +11,6 @@ Variants (perf levers, see EXPERIMENTS.md §Perf):
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -4,16 +4,13 @@ via collectives, compressed gradient all-reduce numerics.
 Multi-device cases run in subprocesses (XLA_FLAGS device-count must be set
 before jax initializes; the main test process keeps 1 device).
 """
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.sharding import batch_spec, cache_spec, param_spec
 

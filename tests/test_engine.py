@@ -1,5 +1,4 @@
 """Burst-buffer engine: conservation, work conservation, paper §5.3 sharing."""
-import numpy as np
 import pytest
 
 from repro.core import EngineConfig, make_workload, metrics, run

@@ -16,7 +16,7 @@ from repro.kernels.token_select.kernel import token_select_pallas
 from repro.kernels.token_select.ref import token_select_ref
 from repro.models.attention import blocked_attention, dense_attention
 from repro.models.rwkv import wkv6_chunked, wkv6_reference
-from repro.models.ssm import ssd_chunked, ssd_reference
+from repro.models.ssm import ssd_reference
 
 
 class TestTokenSelect:

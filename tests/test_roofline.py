@@ -6,7 +6,6 @@ scale the loop-free count by the trip count (which cost_analysis misses).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline.hlo_parse import analyze_hlo, parse_module

@@ -1,11 +1,21 @@
-"""Pluggable scheduler seam: registry, batch engine, cross-plane equivalence."""
+"""Pluggable scheduler seam: registry, batch engine, cross-plane equivalence.
+
+CI runs this file once per registered scheduler (the ``scheduler-matrix``
+job) with ``REPRO_SCHEDULER=<name>`` set; scheduler-specific tests then skip
+unless they target that scheduler, so a failure is attributable to one
+algorithm from the job name alone.  Without the env var every scheduler is
+exercised.
+"""
 import dataclasses
+import os
+import re
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_shim import given, settings, st
 from repro.bb.service import BBClient, BBCluster, JobMeta
 from repro.core import (EngineConfig, make_workload, metrics, run, run_batch)
 from repro.core.engine import _push_arrivals, init_state
@@ -13,6 +23,16 @@ from repro.core.job_table import make_table
 from repro.core.policy import Policy
 from repro.core.scheduler import (Scheduler, TickView, available_schedulers,
                                   get_scheduler, register)
+
+_FOCUS = os.environ.get("REPRO_SCHEDULER")
+ALL_SCHEDULERS = available_schedulers()
+SCHEDULERS = (_FOCUS,) if _FOCUS else ALL_SCHEDULERS
+
+
+def skip_unless(scheduler: str):
+    """Inside a matrix run, skip tests that target a different scheduler."""
+    if _FOCUS and _FOCUS != scheduler:
+        pytest.skip(f"REPRO_SCHEDULER={_FOCUS} focuses this run")
 
 
 def simulate(scheduler, jobs, seconds=10.0, policy="job-fair", **cfg_kw):
@@ -28,6 +48,27 @@ def simulate(scheduler, jobs, seconds=10.0, policy="job-fair", **cfg_kw):
 class TestRegistry:
     def test_paper_schedulers_registered(self):
         assert {"themis", "fifo", "gift", "tbf"} <= set(available_schedulers())
+
+    def test_adaptive_competitors_registered(self):
+        assert {"adaptbf", "plan"} <= set(available_schedulers())
+
+    def test_ci_matrix_covers_registry(self):
+        """Drift guard: the CI scheduler-matrix must list exactly the
+        registered schedulers, so a newly registered algorithm cannot be
+        silently left out of the lattice (README "adding a scheduler",
+        step 4)."""
+        ci = os.path.join(os.path.dirname(__file__), os.pardir,
+                          ".github", "workflows", "ci.yml")
+        if not os.path.exists(ci):
+            pytest.skip("no CI workflow in this checkout")
+        with open(ci) as f:
+            text = f.read()
+        m = re.search(r"scheduler:\s*\[([^\]]*)\]", text)
+        assert m, "scheduler-matrix job lost its matrix.scheduler list"
+        listed = {s.strip() for s in m.group(1).split(",") if s.strip()}
+        assert listed == set(ALL_SCHEDULERS), (
+            f"CI matrix {sorted(listed)} != registry {sorted(ALL_SCHEDULERS)}"
+            " — update .github/workflows/ci.yml")
 
     def test_unknown_scheduler_raises(self):
         with pytest.raises(ValueError, match="unknown scheduler"):
@@ -62,6 +103,7 @@ class TestThemisZeroMassFallback:
     def test_all_new_jobs_after_sync_get_local_chain_shares(self):
         """Jobs that appeared after the last λ-sync (synced segments empty)
         must still draw shares from the local policy chain."""
+        skip_unless("themis")
         table = make_table([dict(size=4), dict(size=1)], max_jobs=4)
         cfg = EngineConfig(n_servers=1, max_jobs=4,
                            policy=Policy.parse("size-fair"))
@@ -77,6 +119,7 @@ class TestThemisZeroMassFallback:
         assert shares[0, 0] / shares[0, 1] == pytest.approx(4.0, rel=1e-4)
 
     def test_synced_segments_win_when_they_have_mass(self):
+        skip_unless("themis")
         table = make_table([dict(size=4), dict(size=1)], max_jobs=4)
         cfg = EngineConfig(n_servers=1, max_jobs=4,
                            policy=Policy.parse("size-fair"))
@@ -108,6 +151,7 @@ class TestRingOverflow:
         assert int(state.dropped) == 3
 
     def test_normal_runs_drop_nothing(self):
+        skip_unless("themis")
         res, _ = simulate("themis", [dict(size=1, procs=16, req_mb=10,
                                           end_s=2)], seconds=2.0)
         assert res["dropped"] == 0
@@ -120,6 +164,7 @@ class TestRunBatch:
     def test_batched_seeds_match_sequential_runs_bitwise(self):
         """The acceptance bar: vmapped per-seed lanes are bit-identical to
         eight sequential run() calls with the same seeds."""
+        skip_unless("themis")
         cfg = EngineConfig(n_servers=1, max_jobs=8, n_workers=4,
                            scheduler="themis",
                            policy=Policy.parse("job-fair"))
@@ -133,6 +178,7 @@ class TestRunBatch:
                 np.testing.assert_array_equal(batch[key][k], res[key])
 
     def test_seeds_actually_differ(self):
+        skip_unless("themis")
         cfg = EngineConfig(n_servers=1, max_jobs=8, n_workers=4,
                            scheduler="themis",
                            policy=Policy.parse("job-fair"))
@@ -146,6 +192,7 @@ class TestCrossPlaneEquivalence:
         """Same size-fair workload through the functional plane (BBCluster)
         and the performance plane (engine) yields matching per-job completion
         proportions — both planes run the one shared scheduler core."""
+        skip_unless("themis")
         # engine: two closed-loop jobs, sizes 4 and 1
         jobs = [dict(user=0, size=4, procs=28, req_mb=10, end_s=6),
                 dict(user=1, size=1, procs=28, req_mb=10, end_s=6)]
@@ -175,6 +222,7 @@ class TestCrossPlaneEquivalence:
 
 class TestFunctionalPlaneSchedulers:
     def test_fifo_preserves_submission_order(self):
+        skip_unless("fifo")
         cluster = BBCluster(n_servers=1, n_workers=1, scheduler="fifo",
                             policy="job-fair")
         a = BBClient(cluster, JobMeta(job_id=1), autodrain=False)
@@ -191,6 +239,7 @@ class TestFunctionalPlaneSchedulers:
 
     @pytest.mark.parametrize("sched", ["gift", "tbf"])
     def test_interval_schedulers_drain_to_completion(self, sched):
+        skip_unless(sched)
         cluster = BBCluster(n_servers=1, scheduler=sched, policy="job-fair")
         c = BBClient(cluster, JobMeta(job_id=5), autodrain=False)
         c.open("/g", "w")
@@ -200,3 +249,152 @@ class TestFunctionalPlaneSchedulers:
         assert len(done) == 31  # create + 30 writes
         f = BBClient(cluster, JobMeta(job_id=5)).open("/g")
         assert f.read(8) == b"z" * 8
+
+
+def _bb_first_window_share(scheduler: str, n: int = 200) -> tuple[float, int]:
+    """Functional plane: two equal jobs submit ``n`` interleaved writes each;
+    returns job 1's share of the first ``n`` completions and the total count
+    drained."""
+    cluster = BBCluster(n_servers=1, scheduler=scheduler, policy="job-fair")
+    a = BBClient(cluster, JobMeta(job_id=1), autodrain=False)
+    b = BBClient(cluster, JobMeta(job_id=2), autodrain=False)
+    a.open("/a", "w")
+    b.open("/b", "w")
+    cluster.drain()
+    for i in range(n):
+        a._req("write", "/a", offset=i * 8, data=b"x" * 8)
+        b._req("write", "/b", offset=i * 8, data=b"y" * 8)
+    done = cluster.drain()
+    first = done[:n]
+    share = sum(1 for r in first if r.job.job_id == 1) / n
+    return share, len(done)
+
+
+class TestEverySchedulerBothPlanes:
+    """The scheduler × plane lattice: every registered algorithm must run
+    unmodified in the jitted engine AND the eager burst-buffer service, and
+    the two planes must agree on how two symmetric jobs split the server."""
+
+    JOBS = [dict(user=0, size=1, procs=8, req_mb=10, end_s=2),
+            dict(user=1, size=1, procs=8, req_mb=10, end_s=2)]
+
+    @pytest.mark.parametrize("sched", SCHEDULERS)
+    def test_engine_serves_all_jobs(self, sched):
+        res, _ = simulate(sched, self.JOBS, seconds=2.0, n_workers=4)
+        assert res["completed"][0] > 0 and res["completed"][1] > 0
+        assert res["dropped"] == 0
+        assert np.isfinite(res["gbps"]).all()
+
+    @pytest.mark.parametrize("sched", SCHEDULERS)
+    def test_functional_plane_drains_and_data_survives(self, sched):
+        share, total = _bb_first_window_share(sched, n=60)
+        assert total == 120  # every submitted request drained
+        cluster = BBCluster(n_servers=1, scheduler=sched, policy="job-fair")
+        c = BBClient(cluster, JobMeta(job_id=9), autodrain=False)
+        c.open("/f", "w")
+        for i in range(10):
+            c._req("write", "/f", offset=i * 8, data=bytes([65 + i]) * 8)
+        cluster.drain()
+        f = BBClient(cluster, JobMeta(job_id=9)).open("/f")
+        assert f.read(8) == b"A" * 8
+
+    @pytest.mark.parametrize("sched", SCHEDULERS)
+    def test_cross_plane_symmetric_split(self, sched):
+        """Two identical jobs: the engine's completion split and the
+        functional plane's first-window completion split must both sit near
+        50/50 and agree — the lattice's cheap equivalence invariant that
+        holds for every algorithm (the themis-specific test above pins the
+        asymmetric size-fair case)."""
+        res, _ = simulate(sched, self.JOBS, seconds=2.0, n_workers=4)
+        c = res["completed"].astype(float)
+        engine_share = c[0] / max(c[0] + c[1], 1.0)
+        bb_share, _ = _bb_first_window_share(sched)
+        assert engine_share == pytest.approx(0.5, abs=0.15)
+        assert bb_share == pytest.approx(engine_share, abs=0.15)
+
+
+def _check_select_and_charge(sched_name: str, seed: int):
+    """Core property: for random queue/byte states, ``select`` never picks a
+    job with zero demand and ``charge`` keeps every aux account finite."""
+    rng = np.random.default_rng(seed)
+    s_, j_ = 2, 6
+    cfg = EngineConfig(n_servers=s_, max_jobs=j_,
+                       scheduler=sched_name,
+                       policy=Policy.parse("job-fair"))
+    sched = get_scheduler(sched_name)
+    table = make_table([dict(size=int(z)) for z in
+                        rng.integers(1, 5, size=j_)], max_jobs=j_)
+    qcount = jnp.asarray(rng.integers(0, 5, size=(s_, j_)), jnp.int32)
+    demand = qcount > 0
+    req_bytes = jnp.asarray(
+        rng.uniform(1.0, 20e6, size=(j_,)), jnp.float32)
+    head_time = jnp.where(
+        demand, jnp.asarray(rng.uniform(0, 10, size=(s_, j_)), jnp.float32),
+        jnp.inf)
+    view = TickView(qcount=qcount, known=demand,
+                    seg=jnp.zeros((s_, j_), jnp.float32),
+                    synced=jnp.zeros((j_,), bool),
+                    live=jnp.ones((j_,), bool))
+    aux = sched.init_aux(s_, j_)
+    aux = sched.refill(cfg, aux, float(rng.uniform(0.0, 1.0)))
+    aux = sched.interval_update(cfg, aux, qcount)
+    shares = sched.tick_shares(cfg, table, view)
+    key = jax.random.PRNGKey(seed & 0x7FFFFFFF)
+    j_sel = np.asarray(sched.select(cfg, shares, head_time, demand, aux,
+                                    req_bytes, key))
+    for s in range(s_):
+        assert j_sel[s] == -1 or bool(demand[s, j_sel[s]]), \
+            f"{sched_name} selected a zero-demand job {j_sel[s]} on row {s}"
+    j_safe = jnp.maximum(jnp.asarray(j_sel), 0)
+    add_b = jnp.where(jnp.asarray(j_sel) >= 0, req_bytes[j_safe], 0.0)
+    aux = sched.charge(cfg, aux, jnp.arange(s_), j_safe, add_b)
+    aux = sched.interval_update(cfg, aux, qcount)  # post-charge μ round
+    for name, leaf in zip(aux._fields, aux):
+        assert np.isfinite(np.asarray(leaf)).all(), \
+            f"{sched_name} aux.{name} went non-finite"
+
+
+class TestSchedulerProperties:
+    """Registry-wide invariants under randomized queue/byte states."""
+
+    @pytest.mark.parametrize("sched", SCHEDULERS)
+    @pytest.mark.parametrize("seed", [0, 1, 17, 123456789])
+    def test_select_demand_and_charge_finite_examples(self, sched, seed):
+        _check_select_and_charge(sched, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_select_demand_and_charge_finite(self, seed):
+        for sched in SCHEDULERS:
+            _check_select_and_charge(sched, seed)
+
+
+class TestAdaptbfBorrowExchange:
+    """Pins of the borrow-exchange accounting (token mass conservation and
+    honest debt bookkeeping)."""
+
+    def _aux(self, bucket, borrowed):
+        sched = get_scheduler("adaptbf")
+        aux = sched.init_aux(1, 4)
+        return sched, aux._replace(
+            bucket=jnp.asarray([bucket], jnp.float32),
+            borrowed=jnp.asarray([borrowed], jnp.float32))
+
+    def test_exchange_conserves_token_mass(self):
+        skip_unless("adaptbf")
+        cfg = EngineConfig(n_servers=1, max_jobs=4, scheduler="adaptbf")
+        sched, aux = self._aux([50.0, 0.0, 10.0, 200.0], [0.0, 0.0, 5.0, 0.0])
+        qcount = jnp.asarray([[4, 8, 0, 0]], jnp.int32)
+        out = sched.interval_update(cfg, aux, qcount)
+        assert float(out.bucket.sum()) == pytest.approx(
+            float(aux.bucket.sum()), rel=1e-5)
+
+    def test_debt_persists_until_tokens_actually_leave(self):
+        skip_unless("adaptbf")
+        cfg = EngineConfig(n_servers=1, max_jobs=4, scheduler="adaptbf")
+        # No peer has any demand: the repay tranche has no taker, so the
+        # borrower keeps both the tokens and the debt.
+        sched, aux = self._aux([100.0, 0.0, 0.0, 0.0], [40.0, 0.0, 0.0, 0.0])
+        out = sched.interval_update(cfg, aux, jnp.zeros((1, 4), jnp.int32))
+        assert float(out.bucket[0, 0]) == pytest.approx(100.0, rel=1e-5)
+        assert float(out.borrowed[0, 0]) == pytest.approx(40.0, rel=1e-5)

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.models import model as M
-from repro.serve.engine import GenRequest, ServeEngine, Tenant
+from repro.serve.engine import ServeEngine, Tenant
 
 
 @pytest.fixture(scope="module")
