@@ -55,6 +55,11 @@ def run_fig12() -> list[tuple]:
                      fmt_stat(j2_m, j2_cov)))
         rows.append((f"fig12_{sched}_job2_std_mbps", f"{us:.0f}",
                      f"{sd_m*1e3:.0f}"))
+        # structured-RunResult metric: Jain index over the contention window
+        jain_m, jain_cov = mean_cov(
+            seed_metric(batch, lambda r: r.jain_fairness(w0, w1)))
+        rows.append((f"fig12_{sched}_jain_index", f"{us:.0f}",
+                     fmt_stat(jain_m, jain_cov)))
     th_peak, _, th_sd = results["themis"]
     for other in schedulers:
         if other == "themis":

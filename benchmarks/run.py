@@ -1,8 +1,12 @@
 """Benchmark harness: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (assignment format); ``--json PATH``
-additionally writes the same rows as a JSON document so CI can archive
-per-commit perf-trajectory artifacts (``BENCH_*.json``).
+additionally writes the rows as a JSON document so CI can archive per-commit
+perf-trajectory artifacts (``BENCH_*.json``).  Each section's document also
+carries a ``runs`` block — one entry per simulation with the scheduler, the
+scheduler-params hash, and the ``dropped`` / ``idle_worker_ticks`` counters —
+so a perf-trend point is attributable to the exact configuration that
+produced it.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig12      # one section
@@ -19,7 +23,7 @@ from .bench_kernels import run_micro
 from .bench_lambda import run_fig14
 from .bench_policies import run_fig8
 from .bench_scaling import run_fig7
-from .common import emit
+from .common import drain_run_log, emit
 
 SECTIONS = {
     "fig7": run_fig7,
@@ -43,17 +47,22 @@ def main() -> None:
             raise SystemExit("--json requires a path argument") from None
         argv = argv[:i] + argv[i + 2:]
     want = argv or list(SECTIONS)
-    all_rows: dict[str, list] = {}
+    all_rows: dict[str, dict] = {}
     print("name,us_per_call,derived")
     for name in want:
         key = next((k for k in SECTIONS if name.startswith(k)), None)
         if key is None:
             raise SystemExit(f"unknown section {name}; have {list(SECTIONS)}")
+        drain_run_log()   # anything stray belongs to no section
         rows = SECTIONS[key]()
         emit(rows)
-        all_rows[key] = [
-            {"name": n, "us_per_call": us, "derived": derived}
-            for n, us, derived in rows]
+        all_rows[key] = {
+            "rows": [
+                {"name": n, "us_per_call": us, "derived": derived}
+                for n, us, derived in rows],
+            # scheduler + params_hash + dropped/idle counters per simulation
+            "runs": drain_run_log(),
+        }
     if json_path:
         doc = {
             "sections": all_rows,

@@ -1,14 +1,17 @@
 """The paper in one screen: FIFO interference vs ThemisIO size-fair.
 
-Runs the discrete-event burst buffer with a 64-node app + 1-node background
-interferer under FIFO and size-fair, printing throughput timelines.
+Runs the discrete-event burst buffer with a 16-node app + 1-node background
+interferer under FIFO and size-fair through the ``repro.api`` Experiment
+facade, printing throughput timelines and the structured RunResult metrics
+(mean throughput, Jain fairness, slowdown vs a solo run).
 
     PYTHONPATH=src python examples/policy_sharing_demo.py
-"""
-import numpy as np
 
-from repro.core import EngineConfig, make_workload, run
-from repro.core.policy import Policy
+``EXAMPLE_SECONDS`` shrinks the simulated duration (CI smoke uses 6).
+"""
+import os
+
+from repro.api import Experiment
 
 
 def spark(vals, lo=0.0, hi=None):
@@ -19,23 +22,25 @@ def spark(vals, lo=0.0, hi=None):
 
 
 def main():
-    jobs = [dict(user=0, size=16, procs=64, req_mb=8, think_s=0.3, end_s=30),
-            dict(user=1, size=1, procs=224, req_mb=10, start_s=8, end_s=22)]
+    sec = float(os.environ.get("EXAMPLE_SECONDS", "30"))
     for sched, pol in [("fifo", None), ("themis", "size-fair")]:
-        cfg = EngineConfig(n_servers=1, max_jobs=4, scheduler=sched,
-                           policy=Policy.parse(pol) if pol else None)
-        wl, table = make_workload(cfg, jobs)
-        res = run(cfg, wl, table, 30.0)
-        app = res["gbps"][0]
-        bg = res["gbps"][1]
+        exp = (Experiment(policy=pol, scheduler=sched, max_jobs=4)
+               .add_job(user=0, size=16, procs=64, req_mb=8, think_s=0.3,
+                        end_s=sec)
+               .add_job(user=1, size=1, procs=224, req_mb=10)
+               .arrivals(job=1, start_s=sec * 4 / 15, end_s=sec * 11 / 15))
+        res = exp.run(sec)
+        w0, w1 = sec / 3, 2 * sec / 3        # both-jobs-active window
         label = pol or "fifo"
         print(f"\n== {label} ==")
-        print(f"app (16 nodes): {spark(app, hi=22)}")
-        print(f"bg  (1 node)  : {spark(bg, hi=22)}")
-        import numpy as np
-        b0, b1 = int(10 / res["bin_s"]), int(20 / res["bin_s"])
+        print(f"app (16 nodes): {spark(res.job_gbps(0), hi=22)}")
+        print(f"bg  (1 node)  : {spark(res.job_gbps(1), hi=22)}")
+        solo = exp.solo(0, sec)
         print(f"app mean throughput during contention: "
-              f"{float(np.mean(res['gbps'][0][b0:b1])):.2f} GB/s")
+              f"{res.mean_gbps(0, w0, w1):.2f} GB/s "
+              f"(slowdown vs solo {res.slowdown(solo, 0, w0, w1):.2f}x, "
+              f"Jain fairness {res.jain_fairness(w0, w1):.3f}, "
+              f"dropped={res.dropped})")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,15 @@
 """Quickstart: train a small LM whose data + checkpoints flow through a
-policy-scheduled ThemisIO burst buffer.
+policy-scheduled ThemisIO burst buffer — stood up via the ``repro.api``
+Experiment facade (the same spec object could instead ``.run()`` on the
+discrete-event engine).
 
     PYTHONPATH=src python examples/quickstart.py
-"""
 
-from repro.bb.service import BBClient, BBCluster, JobMeta
+``EXAMPLE_STEPS`` shrinks the training run (CI smoke uses 12).
+"""
+import os
+
+from repro.api import Experiment
 from repro.ckpt.manager import CheckpointManager
 from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig, DataLoader, ShardWriter
@@ -13,18 +18,25 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 
 def main():
+    steps = int(os.environ.get("EXAMPLE_STEPS", "60"))
     cfg = get_config("h2o-danube-1.8b", reduced=True)
-    # a 2-server burst buffer shared under size-fair policy
-    cluster = BBCluster(n_servers=2, policy="size-fair")
-    client = BBClient(cluster, JobMeta(job_id=1, user=0, size=4))
+    # a 2-server burst buffer shared under size-fair policy; the facade
+    # stands up the cluster and a metadata-stamped client per declared job
+    svc = (Experiment(policy="size-fair", n_servers=2)
+           .add_job(user=0, size=4)
+           .serve())
+    client = svc.client(0)
 
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, batch_size=4,
                       shard_tokens=1 << 15, n_shards=2)
     ShardWriter(dcfg, client=client).write_epoch(0)
     loader = DataLoader(dcfg, client=client)
 
-    trainer = Trainer(cfg, O.OptConfig(lr=1e-3, warmup_steps=10, total_steps=60),
-                      TrainerConfig(total_steps=60, ckpt_every=20),
+    trainer = Trainer(cfg,
+                      O.OptConfig(lr=1e-3, warmup_steps=min(10, steps // 2),
+                                  total_steps=steps),
+                      TrainerConfig(total_steps=steps,
+                                    ckpt_every=max(2, steps // 3)),
                       loader,
                       ckpt=CheckpointManager("/ckpt", client=client),
                       bb_client=client)
@@ -32,9 +44,9 @@ def main():
     hist = trainer.run()
     first, last = hist[0]["loss"], hist[-1]["loss"]
     print(f"steps={len(hist)} loss {first:.3f} -> {last:.3f}")
-    srv = cluster.servers[0]
+    srv = svc.cluster.servers[0]
     print(f"BB server0 processed {len(srv.processed)} requests "
-          f"({cluster.fs.stores[0].bytes_written/1e6:.1f} MB written)")
+          f"({svc.cluster.fs.stores[0].bytes_written/1e6:.1f} MB written)")
     assert last < first
     print("OK")
 

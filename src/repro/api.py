@@ -1,0 +1,389 @@
+"""Plane-agnostic experiment facade: one spec, both planes, structured results.
+
+:class:`Experiment` is the single public entry point for running a policy /
+scheduler combination.  Build the spec once::
+
+    from repro.api import Experiment
+
+    exp = (Experiment(policy="group-then-user-fair", scheduler="adaptbf")
+           .add_job(user=0, group=1, size=4, req_mb=8)
+           .add_job(user=1, group=0, size=1, req_mb=10)
+           .arrivals(job=1, start_s=5.0, end_s=20.0))
+
+then execute the *same object* on either plane:
+
+  * ``exp.run(seconds)`` / ``exp.run_batch(seconds, seeds)`` — the jitted
+    discrete-event engine (:mod:`repro.core.engine`, performance plane),
+    returning a :class:`RunResult` / :class:`BatchRunResult`;
+  * ``exp.serve()`` — a live burst-buffer service (:mod:`repro.bb.service`,
+    functional plane) wired with the identical policy, scheduler, and
+    scheduler params, plus one metadata-stamped client per declared job.
+
+Scheduler knobs travel as the scheduler's own frozen schema
+(:mod:`repro.core.params`) via ``params=``; the engine config never learns
+scheduler-specific fields.  Results are structured: per-job throughput bins,
+mean/CoV, Jain fairness index, slowdown vs a solo run, and the dropped /
+idle-worker counters, with dict-style access kept for the legacy
+``repro.core.metrics`` helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.bb.service import BBClient, BBCluster, JobMeta
+from repro.core import metrics
+from repro.core.engine import EngineConfig, make_workload, run, run_batch
+from repro.core.params import SchedulerParams
+from repro.core.policy import Policy
+from repro.core.scheduler import get_scheduler
+
+_LEGACY_KEYS = ("gbps", "bin_s", "issued", "completed", "dropped",
+                "idle_worker_ticks", "ticks", "state", "seeds")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    """Structured outcome of one engine run.
+
+    Array shapes use ``J`` = job-table slots and ``NB`` = throughput bins;
+    only the first :attr:`n_jobs` slots correspond to declared jobs.
+    """
+
+    scheduler: str
+    params: SchedulerParams
+    policy: Optional[str]
+    n_jobs: int
+    seconds: float
+    gbps: np.ndarray              # f32[J, NB] per-bin throughput (GB/s)
+    bin_s: float
+    issued: np.ndarray            # i32[J]
+    completed: np.ndarray         # i32[J]
+    dropped: int                  # arrivals rejected by full rings
+    idle_worker_ticks: int        # workers idle while demand existed
+    ticks: int
+    state: object = dataclasses.field(default=None, repr=False)
+
+    # -- legacy dict-style access (repro.core.metrics helpers) ---------------
+    def __getitem__(self, key):
+        if key in _LEGACY_KEYS:
+            try:
+                return getattr(self, key)
+            except AttributeError:       # e.g. 'seeds' on a non-batch result
+                raise KeyError(key) from None
+        raise KeyError(key)
+
+    # -- derived metrics -----------------------------------------------------
+    def _window(self, t0: float, t1: Optional[float]) -> slice:
+        b1 = self.gbps.shape[-1] if t1 is None else int(t1 / self.bin_s)
+        return slice(int(t0 / self.bin_s), b1)
+
+    def job_gbps(self, job: int) -> np.ndarray:
+        """Per-bin throughput trace (GB/s) of one job."""
+        return self.gbps[job]
+
+    def mean_gbps(self, job: Optional[int] = None, t0: float = 0.0,
+                  t1: Optional[float] = None) -> float:
+        """Mean throughput over a window — one job, or the aggregate."""
+        g = self.gbps.sum(axis=0) if job is None else self.gbps[job]
+        w = g[self._window(t0, t1)]
+        return float(w.mean()) if w.size else 0.0
+
+    def cov_gbps(self, job: Optional[int] = None, t0: float = 0.0,
+                 t1: Optional[float] = None) -> float:
+        """Per-bin coefficient of variation (std/mean) over a window — the
+        shape the paper's variance claims are stated in."""
+        g = self.gbps.sum(axis=0) if job is None else self.gbps[job]
+        w = g[self._window(t0, t1)]
+        m = float(w.mean()) if w.size else 0.0
+        return float(w.std()) / m if m else 0.0
+
+    def jain_fairness(self, t0: float = 0.0, t1: Optional[float] = None,
+                      jobs: Optional[Sequence[int]] = None) -> float:
+        """Jain index over per-job mean throughput in the window.  Defaults
+        to every declared job that issued at least one request."""
+        if jobs is None:
+            jobs = [j for j in range(self.n_jobs) if self.issued[j] > 0]
+        return metrics.jain_index(
+            [self.mean_gbps(j, t0, t1) for j in jobs])
+
+    def slowdown(self, solo: "RunResult", job: int = 0, t0: float = 0.0,
+                 t1: Optional[float] = None) -> float:
+        """Throughput slowdown of ``job`` vs a solo (uncontended) run of the
+        same job: ``solo_mean / shared_mean``; 1.0 = no interference.  ``inf``
+        when the shared run starved the job completely.
+
+        ``Experiment.solo(j)`` re-declares job ``j`` as its only job (slot 0),
+        so a single-job ``solo`` is read at slot 0 regardless of ``job``; a
+        multi-job baseline is read at the same slot as the shared run."""
+        shared = self.mean_gbps(job, t0, t1)
+        alone = solo.mean_gbps(0 if solo.n_jobs == 1 else job, t0, t1)
+        return alone / shared if shared > 0 else float("inf")
+
+    def params_hash(self) -> str:
+        return self.params.params_hash()
+
+    def counters(self) -> dict:
+        """The attribution block BENCH_*.json artifacts embed per run."""
+        return {
+            "scheduler": self.scheduler,
+            "policy": self.policy,
+            "params_hash": self.params_hash(),
+            "dropped": int(np.asarray(self.dropped).sum()),
+            "idle_worker_ticks": int(np.asarray(self.idle_worker_ticks).sum()),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRunResult(RunResult):
+    """A :func:`repro.core.run_batch` outcome: every array gains a leading
+    ``K = len(seeds)`` axis; each lane is bit-identical to a sequential run."""
+
+    seeds: np.ndarray = dataclasses.field(default=None)
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+    # The inherited per-run metrics would silently index the *seed* axis as
+    # the job axis (gbps here is [K, J, NB]); refuse instead of mis-answering.
+    def _per_run_only(self, name: str):
+        raise TypeError(
+            f"{name}() is a per-run metric; on a batch use "
+            f"seed_result(k).{name}(...) or mean_cov(lambda r: r.{name}(...))")
+
+    def job_gbps(self, job):
+        self._per_run_only("job_gbps")
+
+    def mean_gbps(self, job=None, t0=0.0, t1=None):
+        self._per_run_only("mean_gbps")
+
+    def cov_gbps(self, job=None, t0=0.0, t1=None):
+        self._per_run_only("cov_gbps")
+
+    def jain_fairness(self, t0=0.0, t1=None, jobs=None):
+        self._per_run_only("jain_fairness")
+
+    def slowdown(self, solo, job=0, t0=0.0, t1=None):
+        self._per_run_only("slowdown")
+
+    def seed_result(self, k: int) -> RunResult:
+        """Slice one PRNG lane into a plain :class:`RunResult`."""
+        return RunResult(
+            scheduler=self.scheduler, params=self.params, policy=self.policy,
+            n_jobs=self.n_jobs, seconds=self.seconds,
+            gbps=self.gbps[k], bin_s=self.bin_s,
+            issued=self.issued[k], completed=self.completed[k],
+            dropped=int(self.dropped[k]),
+            idle_worker_ticks=int(self.idle_worker_ticks[k]),
+            ticks=self.ticks)
+
+    def per_seed(self) -> list[RunResult]:
+        return [self.seed_result(k) for k in range(self.n_seeds)]
+
+    def seed_metric(self, fn) -> list[float]:
+        """Evaluate ``fn(RunResult)`` on every lane."""
+        return [fn(r) for r in self.per_seed()]
+
+    def mean_cov(self, fn) -> tuple[float, float]:
+        """Mean and coefficient of variation of a per-seed metric."""
+        return metrics.mean_cov(self.seed_metric(fn))
+
+
+@dataclasses.dataclass
+class ExperimentService:
+    """The functional-plane side of an :class:`Experiment`: a live
+    :class:`BBCluster` plus one metadata-stamped :class:`BBClient` per
+    declared job (same user/group/size/priority the engine's job table
+    carries)."""
+
+    cluster: BBCluster
+    clients: list[BBClient]
+
+    def client(self, job: int) -> BBClient:
+        return self.clients[job]
+
+    def drain(self):
+        return self.cluster.drain()
+
+
+class Experiment:
+    """Builder for a policy × scheduler × workload spec that runs on either
+    plane.  All builder methods return ``self`` for chaining; the spec stays
+    mutable until a ``run*``/``serve`` call compiles it into a config."""
+
+    def __init__(self, policy: Optional[str | Policy] = None,
+                 scheduler: str = "themis", *,
+                 params: Optional[SchedulerParams] = None,
+                 n_servers: int = 1, n_workers: int = 8,
+                 server_bw: float = 22e9, max_jobs: Optional[int] = None,
+                 seed: int = 0, **engine_kw):
+        self.scheduler = scheduler
+        self.sched = get_scheduler(scheduler)   # fail fast on unknown names
+        if params is not None and type(params) is not self.sched.params_cls:
+            raise TypeError(
+                f"scheduler {scheduler!r} expects exactly "
+                f"{self.sched.params_cls.__name__}, got {type(params).__name__}")
+        self.params = params
+        self.policy = (Policy.parse(policy) if isinstance(policy, str)
+                       else policy)
+        if self.policy is None and self.sched.uses_segments:
+            # Segment schedulers need a policy chain; default it here so both
+            # planes see the same one (serve() used to fill this in alone,
+            # leaving run() to crash deep inside the chain builder).
+            self.policy = Policy.parse("job-fair")
+        self.n_servers = n_servers
+        self.n_workers = n_workers
+        self.server_bw = server_bw
+        self.max_jobs = max_jobs
+        self.seed = seed
+        self.engine_kw = engine_kw              # dt, bin_ticks, sync_ticks, ...
+        self.jobs: list[dict] = []
+
+    # -- workload builder ----------------------------------------------------
+    def add_job(self, *, user: int = 0, group: int = 0, size: int = 1,
+                priority: float = 1.0, procs: Optional[int] = None,
+                req_mb: float = 10.0, start_s: float = 0.0,
+                end_s: Optional[float] = None, think_s: float = 0.0,
+                servers: Optional[Sequence[int]] = None,
+                overhead_us: float = 0.0) -> "Experiment":
+        """Declare one closed-loop job (the engine's workload row and the
+        service's :class:`JobMeta` in one statement).  ``procs`` defaults to
+        ``size * 56`` client processes; ``end_s`` to "the whole run"."""
+        spec = dict(user=user, group=group, size=size, priority=priority,
+                    req_mb=req_mb, start_s=start_s, think_s=think_s,
+                    overhead_us=overhead_us)
+        if procs is not None:
+            spec["procs"] = procs
+        if end_s is not None:
+            spec["end_s"] = end_s
+        if servers is not None:
+            spec["servers"] = list(servers)
+        self.jobs.append(spec)
+        return self
+
+    def add_jobs(self, specs: Iterable[dict]) -> "Experiment":
+        """Bulk form of :meth:`add_job` over raw workload spec dicts (the
+        :func:`repro.core.make_workload` vocabulary) — the migration path for
+        existing benchmark job lists."""
+        for spec in specs:
+            self.jobs.append(dict(spec))
+        return self
+
+    def arrivals(self, *, job: Optional[int] = None,
+                 start_s: Optional[float] = None,
+                 end_s: Optional[float] = None,
+                 think_s: Optional[float] = None) -> "Experiment":
+        """Adjust arrival timing — of one declared job (``job=i``) or of
+        every declared job — without re-stating the rest of its spec."""
+        if not self.jobs:
+            raise ValueError("arrivals() needs at least one add_job() first")
+        targets = self.jobs if job is None else [self.jobs[job]]
+        for spec in targets:
+            if start_s is not None:
+                spec["start_s"] = start_s
+            if end_s is not None:
+                spec["end_s"] = end_s
+            if think_s is not None:
+                spec["think_s"] = think_s
+        return self
+
+    # -- compilation ---------------------------------------------------------
+    def _slots(self) -> int:
+        return self.max_jobs if self.max_jobs else max(8, len(self.jobs))
+
+    def engine_config(self) -> EngineConfig:
+        """The performance-plane config this spec compiles to.  The policy is
+        attached only for segment-based schedulers (it is inert elsewhere),
+        mirroring what the pre-facade entry points did."""
+        return EngineConfig(
+            n_servers=self.n_servers, max_jobs=self._slots(),
+            n_workers=self.n_workers, server_bw=self.server_bw,
+            scheduler=self.scheduler, scheduler_params=self.params,
+            policy=self.policy if self.sched.uses_segments else None,
+            seed=self.seed, **self.engine_kw)
+
+    def build(self):
+        """(cfg, workload, job_table) — escape hatch to the raw engine API."""
+        cfg = self.engine_config()
+        wl, table = make_workload(cfg, self.jobs)
+        return cfg, wl, table
+
+    def resolved_params(self) -> SchedulerParams:
+        return self.sched.params(self.engine_config())
+
+    # -- execution -----------------------------------------------------------
+    def _policy_name(self) -> Optional[str]:
+        return self.policy.name or None if self.policy else None
+
+    def run(self, seconds: float) -> RunResult:
+        """One jitted engine run -> :class:`RunResult`."""
+        if not self.jobs:
+            raise ValueError("run() needs at least one add_job()")
+        cfg, wl, table = self.build()
+        raw = run(cfg, wl, table, seconds)
+        return RunResult(
+            scheduler=self.scheduler, params=self.sched.params(cfg),
+            policy=self._policy_name(), n_jobs=len(self.jobs),
+            seconds=seconds, gbps=raw["gbps"], bin_s=raw["bin_s"],
+            issued=raw["issued"], completed=raw["completed"],
+            dropped=raw["dropped"],
+            idle_worker_ticks=raw["idle_worker_ticks"],
+            ticks=raw["ticks"], state=raw["state"])
+
+    def run_batch(self, seconds: float,
+                  seeds: Sequence[int] = tuple(range(8))) -> BatchRunResult:
+        """One vmapped compile over PRNG ``seeds`` -> :class:`BatchRunResult`
+        (each lane bit-identical to ``run()`` with that seed)."""
+        if not self.jobs:
+            raise ValueError("run_batch() needs at least one add_job()")
+        cfg, wl, table = self.build()
+        raw = run_batch(cfg, wl, table, seconds, seeds=seeds)
+        return BatchRunResult(
+            scheduler=self.scheduler, params=self.sched.params(cfg),
+            policy=self._policy_name(), n_jobs=len(self.jobs),
+            seconds=seconds, gbps=raw["gbps"], bin_s=raw["bin_s"],
+            issued=raw["issued"], completed=raw["completed"],
+            dropped=raw["dropped"],
+            idle_worker_ticks=raw["idle_worker_ticks"],
+            ticks=raw["ticks"], state=raw["state"], seeds=raw["seeds"])
+
+    def solo(self, job: int, seconds: float) -> RunResult:
+        """Run one declared job alone (same engine config) — the baseline
+        :meth:`RunResult.slowdown` compares against."""
+        clone = Experiment(
+            policy=self.policy, scheduler=self.scheduler, params=self.params,
+            n_servers=self.n_servers, n_workers=self.n_workers,
+            server_bw=self.server_bw, max_jobs=self._slots(),
+            seed=self.seed, **self.engine_kw)
+        clone.jobs = [dict(self.jobs[job])]
+        return clone.run(seconds)
+
+    def serve(self, *, autodrain: bool = True, lam_s: float = 0.5,
+              stripes: int = 1) -> ExperimentService:
+        """Stand up the functional plane for this spec: a :class:`BBCluster`
+        driven by the same scheduler object and params, plus one client per
+        declared job (job ids are 1-based to match the service's examples)."""
+        cluster = BBCluster(
+            n_servers=self.n_servers,
+            policy=self.policy if self.policy is not None else "job-fair",
+            scheduler=self.scheduler, scheduler_params=self.params,
+            n_workers=self.n_workers, bandwidth=self.server_bw,
+            max_jobs=self._slots(), lam_s=lam_s, seed=self.seed,
+            stripes=stripes)
+        # Same spec, both planes: hand the service the exact engine config
+        # (incl. dt / engine_kw overrides the BBCluster ctor doesn't take),
+        # so e.g. μ boundaries fall at identical virtual times.
+        cluster.cfg = dataclasses.replace(
+            self.engine_config(), policy=cluster.cfg.policy)
+        clients = [
+            BBClient(cluster,
+                     JobMeta(job_id=j + 1, user=spec.get("user", 0),
+                             group=spec.get("group", 0),
+                             size=spec.get("size", 1),
+                             priority=spec.get("priority", 1.0)),
+                     autodrain=autodrain)
+            for j, spec in enumerate(self.jobs)]
+        return ExperimentService(cluster=cluster, clients=clients)

@@ -159,7 +159,8 @@ class BBCluster:
     """
 
     def __init__(self, n_servers: int = 2, *, policy: str | Policy = "size-fair",
-                 scheduler: str = "themis", n_workers: int = 8,
+                 scheduler: str = "themis", scheduler_params=None,
+                 n_workers: int = 8,
                  bandwidth: float = 22e9, max_jobs: int = 32,
                  lam_s: float = 0.5, seed: int = 0, stripes: int = 1):
         self.fs = FileSystem(n_servers, default_stripes=stripes)
@@ -169,7 +170,8 @@ class BBCluster:
         self.sched = get_scheduler(scheduler)
         self.cfg = EngineConfig(
             n_servers=n_servers, max_jobs=max_jobs, n_workers=n_workers,
-            server_bw=bandwidth, scheduler=scheduler, policy=self.policy,
+            server_bw=bandwidth, scheduler=scheduler,
+            scheduler_params=scheduler_params, policy=self.policy,
             seed=seed)
         self.aux = self.sched.init_aux(n_servers, max_jobs)
         self.max_jobs = max_jobs
@@ -260,7 +262,10 @@ class BBCluster:
         global completion order (the observable the paper's policies shape)."""
         done: list[Request] = []
         cfg, sched = self.cfg, self.sched
-        mu_s = cfg.gift_mu_ticks * cfg.dt
+        mu_s = sched.mu_s(cfg)
+        # Params resolution builds a fresh frozen dataclass; hoist the
+        # per-request constant out of the worker loop like the engine does.
+        ctrl_s = sched.ctrl_overhead_s(cfg)
         stalls = 0
         while True:
             if sched.uses_segments and (
@@ -294,8 +299,7 @@ class BBCluster:
                     self.aux = sched.charge(cfg, self.aux, srv.sid, slot, nbytes)
                     srv._execute(req)
                     t0 = max(srv.worker_free[w], self.clock)
-                    srv.worker_free[w] = (t0 + srv._service(req)
-                                          + sched.ctrl_overhead_s(cfg))
+                    srv.worker_free[w] = t0 + srv._service(req) + ctrl_s
                     req.done_at = srv.worker_free[w]
                     srv.processed.append((req.done_at, req.job.job_id, req.op))
                     done.append(req)

@@ -23,6 +23,7 @@ samples throughput at 1 s, ≫ our default 1 ms tick.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -32,12 +33,22 @@ import numpy as np
 from . import baselines
 from .global_sync import sync_segments
 from .job_table import JobTable, make_table
+from .params import LEGACY_FLAT_KNOBS, SchedulerParams
 from .policy import Policy
 from .scheduler import TickView, get_scheduler
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Engine-only configuration.
+
+    Scheduler knobs live in the scheduler's own schema
+    (:mod:`repro.core.params`): pass a frozen params instance via
+    ``scheduler_params`` or leave it ``None`` for the schema defaults.  The
+    flat per-scheduler fields of earlier releases survive below as a
+    deprecation shim only.
+    """
+
     n_servers: int = 2
     max_jobs: int = 16
     n_workers: int = 8           # per server
@@ -52,37 +63,47 @@ class EngineConfig:
     policy: Optional[Policy] = None
     sync_ticks: int = 500        # λ in ticks; 0 disables sync (local-only view)
     sinkhorn_iters: int = 32
-    # μ interval in ticks — despite the historical name this is the cadence
-    # for EVERY interval scheduler (gift, tbf, adaptbf, plan: budget resets,
-    # borrow exchanges, replanning).  §5.4: μ = 0.5 s works best here.
-    gift_mu_ticks: int = 500
-    gift_coupon_frac: float = 0.5
-    gift_ctrl_overhead_s: float = 5e-4   # BSIP pause/resume + progress sync per request
-    # TBF reference parameters
-    tbf_rate: float = 0.0        # bytes/s per job; 0 -> server_bw / max_jobs
-    tbf_burst_s: float = 0.25    # bucket depth in seconds of rate
-    tbf_headroom: float = 0.8    # PSSB conservative spare-estimation factor
-    tbf_ctrl_overhead_s: float = 5.5e-4  # rule-engine admission cost per request
-    # AdapTBF parameters (decentralized adaptive token borrowing; shares
-    # tbf_rate_eff() so TBF vs AdapTBF isolates the borrowing mechanism)
-    adaptbf_burst_s: float = 1.0         # bucket depth in seconds of rate
-    adaptbf_repay: float = 0.25          # per-μ repayment decay on borrowed tokens
-    adaptbf_ctrl_overhead_s: float = 1e-4  # no rule engine: local bucket ops only
-    # plan-based scheduler parameters
-    plan_ema_alpha: float = 0.3          # qcount-history EMA weight per μ
-    plan_ctrl_overhead_s: float = 2e-4   # per-request share of plan construction
+    # The scheduler's own knobs (repro.core.params schema matching
+    # ``scheduler``); None -> resolved from the legacy shim / schema defaults.
+    scheduler_params: Optional[SchedulerParams] = None
     # Fabric model for multi-server scaling (calibrated to paper Fig. 7:
     # efficiency ~ S^-0.08 => 82% at 8 servers, 68% at 128).
     fabric_exponent: float = 0.0
     seed: int = 0
+    # ------------------------------------------------------------------
+    # DEPRECATION SHIM — legacy flat scheduler knobs (remove next release).
+    # None means "not set"; setting any of them warns and routes the value
+    # through SchedulerParams.from_engine_config, reproducing the historical
+    # behavior bit-identically.  New code: use ``scheduler_params``.
+    # ------------------------------------------------------------------
+    gift_mu_ticks: Optional[int] = None          # -> <Interval>Params.mu_ticks
+    gift_coupon_frac: Optional[float] = None     # -> GiftParams.coupon_frac
+    gift_ctrl_overhead_s: Optional[float] = None  # -> GiftParams.ctrl_overhead_s
+    tbf_rate: Optional[float] = None             # -> TbfParams/AdaptbfParams.rate
+    tbf_burst_s: Optional[float] = None          # -> TbfParams.burst_s
+    tbf_headroom: Optional[float] = None         # -> TbfParams.headroom
+    tbf_ctrl_overhead_s: Optional[float] = None  # -> TbfParams.ctrl_overhead_s
+    adaptbf_burst_s: Optional[float] = None      # -> AdaptbfParams.burst_s
+    adaptbf_repay: Optional[float] = None        # -> AdaptbfParams.repay
+    adaptbf_ctrl_overhead_s: Optional[float] = None  # -> AdaptbfParams.ctrl_overhead_s
+    plan_ema_alpha: Optional[float] = None       # -> PlanParams.ema_alpha
+    plan_ctrl_overhead_s: Optional[float] = None  # -> PlanParams.ctrl_overhead_s
+
+    def __post_init__(self):
+        legacy_set = [k for k in LEGACY_FLAT_KNOBS
+                      if getattr(self, k) is not None]
+        if legacy_set:
+            warnings.warn(
+                f"flat EngineConfig scheduler knobs {legacy_set} are "
+                "deprecated and will be removed in the next release; pass a "
+                "repro.core.params schema via EngineConfig(scheduler_params"
+                "=...) or use repro.api.Experiment",
+                DeprecationWarning, stacklevel=3)
 
     @property
     def worker_bw(self) -> float:
         eff = float(self.n_servers) ** (-self.fabric_exponent)
         return self.server_bw / self.n_workers * eff
-
-    def tbf_rate_eff(self) -> float:
-        return self.tbf_rate if self.tbf_rate > 0 else self.server_bw / self.max_jobs
 
 
 class Workload(NamedTuple):
@@ -322,6 +343,7 @@ def run(cfg: EngineConfig, wl: Workload, table: JobTable, sim_seconds: float):
         "issued": np.asarray(state.issued),
         "completed": np.asarray(state.completed),
         "dropped": int(state.dropped),
+        "idle_worker_ticks": int(state.idle_worker_ticks),
         "ticks": ticks,
     }
 
@@ -361,5 +383,6 @@ def run_batch(cfg: EngineConfig, wl: Workload, table: JobTable,
         "issued": np.asarray(state.issued),                  # [K, J]
         "completed": np.asarray(state.completed),            # [K, J]
         "dropped": np.asarray(state.dropped),                # [K]
+        "idle_worker_ticks": np.asarray(state.idle_worker_ticks),  # [K]
         "ticks": ticks,
     }

@@ -4,6 +4,31 @@ from __future__ import annotations
 import numpy as np
 
 
+def jain_index(values) -> float:
+    """Jain's fairness index of an allocation vector: ``(Σx)² / (n·Σx²)``.
+
+    1.0 is a perfectly even split, ``1/n`` is one entity taking everything.
+    Entries that are exactly zero are kept (a starved job *is* unfairness);
+    an empty or all-zero vector returns 1.0 (nothing to be unfair about).
+    """
+    x = np.asarray(list(values), dtype=np.float64)
+    if x.size == 0:
+        return 1.0
+    sq = float((x * x).sum())
+    if sq == 0.0:
+        return 1.0
+    return float(x.sum()) ** 2 / (x.size * sq)
+
+
+def mean_cov(values) -> tuple[float, float]:
+    """Mean and coefficient of variation (std/mean) of a metric across runs —
+    the reduction the paper's variance-at-scale claims are stated in.  A
+    zero mean reports CoV 0.0 (no signal, no variation claim)."""
+    a = np.asarray(list(values), dtype=np.float64)
+    m = float(a.mean())
+    return m, (float(a.std() / abs(m)) if m else 0.0)
+
+
 def median_gbps(result, job: int, t0: float, t1: float) -> float:
     """Median per-bin throughput of a job over [t0, t1) seconds."""
     g = result["gbps"][job]

@@ -1,0 +1,253 @@
+"""Scheduler-owned parameter schemas.
+
+Every entry in the :mod:`repro.core.scheduler` registry declares its knobs as
+a frozen dataclass here, instead of spreading ``gift_*`` / ``tbf_*`` /
+``adaptbf_*`` / ``plan_*`` fields through :class:`repro.core.engine.EngineConfig`.
+The contract per schema:
+
+  * **defaults** — instantiating with no arguments reproduces the calibrated
+    behavior the benchmarks are pinned to;
+  * **validation** — ``__post_init__`` raises ``ValueError`` on out-of-range
+    values, so a typo fails at construction, not as a silent NaN 40 s into a
+    jitted scan;
+  * **legacy shim** — :meth:`SchedulerParams.from_engine_config` rebuilds the
+    schema from the deprecated flat ``EngineConfig`` knobs (kept for one
+    release; see the migration table in the README), and
+    :meth:`to_legacy_knobs` inverts it for round-trip tests.
+
+Resolution order (``SchedulerParams.resolve``): an explicit
+``EngineConfig.scheduler_params`` wins; otherwise the schema is rebuilt from
+whatever legacy flat knobs were set, falling back to the schema defaults.
+Both paths yield the same frozen object for the same values, so legacy and
+new-style construction produce bit-identical traces.
+
+The schemas are plain Python consumed at trace time (``EngineConfig`` is a
+static closure of the jitted tick), so nothing here touches jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import ClassVar, Dict, Mapping
+
+#: μ cadence every interval scheduler shares by default (ticks); §5.4 finds
+#: μ = 0.5 s (500 ticks at dt=1 ms) works best on this substrate.
+DEFAULT_MU_TICKS = 500
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerParams:
+    """Base schema: no knobs. Schedulers with no tunables use it directly
+    via a trivial subclass, so ``available_schedulers()`` can promise every
+    entry exposes a schema with defaults."""
+
+    #: param-field -> legacy flat EngineConfig attribute (deprecation shim).
+    legacy_knobs: ClassVar[Mapping[str, str]] = {}
+
+    @classmethod
+    def from_engine_config(cls, cfg) -> "SchedulerParams":
+        """Rebuild the schema from deprecated flat ``EngineConfig`` knobs.
+
+        Only knobs the caller actually set (non-``None``) override the schema
+        defaults, so a default-constructed config resolves to the schema's own
+        defaults — the values the flat knobs used to carry.
+        """
+        kw = {}
+        for field, legacy in cls.legacy_knobs.items():
+            v = getattr(cfg, legacy, None)
+            if v is not None:
+                kw[field] = v
+        return cls(**kw)
+
+    @classmethod
+    def resolve(cls, cfg) -> "SchedulerParams":
+        """Explicit ``cfg.scheduler_params`` wins; else the legacy shim.
+
+        The type check is exact, not ``isinstance``: schemas share bases
+        (``_BucketParams``, ``_IntervalParams``), and accepting a sibling or
+        subclass schema for the wrong scheduler would silently run it with
+        another algorithm's calibrated values (and stamp the wrong params
+        hash into benchmark artifacts).
+        """
+        p = getattr(cfg, "scheduler_params", None)
+        if p is None:
+            return cls.from_engine_config(cfg)
+        if type(p) is not cls:
+            raise TypeError(
+                f"scheduler_params is {type(p).__name__}, but the configured "
+                f"scheduler expects exactly {cls.__name__}")
+        return p
+
+    def to_legacy_knobs(self) -> Dict[str, object]:
+        """Inverse of :meth:`from_engine_config`: flat-knob kwargs that make a
+        legacy ``EngineConfig`` reproduce this schema bit-identically."""
+        return {legacy: getattr(self, field)
+                for field, legacy in self.legacy_knobs.items()}
+
+    def params_hash(self) -> str:
+        """Stable short hash of (schema type, every field value) — stamped
+        into BENCH_*.json so perf-trend points are attributable to configs."""
+        doc = {"schema": type(self).__name__}
+        doc.update({f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)})
+        blob = json.dumps(doc, sort_keys=True, default=repr).encode()
+        return hashlib.sha256(blob).hexdigest()[:12]
+
+
+@dataclasses.dataclass(frozen=True)
+class ThemisParams(SchedulerParams):
+    """Statistical tokens have no per-scheduler tunables: the policy chain,
+    λ cadence (``EngineConfig.sync_ticks``) and Sinkhorn iteration count are
+    engine/policy-level concerns shared with the sync subsystem."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FifoParams(SchedulerParams):
+    """Arrival order needs no knobs."""
+
+
+@dataclasses.dataclass(frozen=True)
+class _IntervalParams(SchedulerParams):
+    """Shared μ cadence for every interval scheduler (budget resets, borrow
+    exchanges, replanning).  The legacy flat knob was ``gift_mu_ticks`` —
+    historical name, global effect."""
+
+    mu_ticks: int = DEFAULT_MU_TICKS
+
+    def __post_init__(self):
+        _require(self.mu_ticks > 0, f"mu_ticks must be > 0, got {self.mu_ticks}")
+
+
+@dataclasses.dataclass(frozen=True)
+class GiftParams(_IntervalParams):
+    """GIFT (FAST'20): BSIP equal-share interval budgets + throttle-and-reward
+    coupons; ``ctrl_overhead_s`` models the BSIP pause/resume + progress-sync
+    cost per request."""
+
+    coupon_frac: float = 0.5
+    ctrl_overhead_s: float = 5e-4
+
+    legacy_knobs: ClassVar[Mapping[str, str]] = {
+        "mu_ticks": "gift_mu_ticks",
+        "coupon_frac": "gift_coupon_frac",
+        "ctrl_overhead_s": "gift_ctrl_overhead_s",
+    }
+
+    def __post_init__(self):
+        super().__post_init__()
+        _require(0.0 <= self.coupon_frac <= 1.0,
+                 f"coupon_frac must be in [0, 1], got {self.coupon_frac}")
+        _require(self.ctrl_overhead_s >= 0.0,
+                 f"ctrl_overhead_s must be >= 0, got {self.ctrl_overhead_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class _BucketParams(_IntervalParams):
+    """Shared token-bucket base: TBF and AdapTBF deliberately share the
+    per-job ``rate`` (legacy knob ``tbf_rate``), so comparing the two
+    isolates exactly what the borrowing mechanism buys.  Not a parent/child
+    relationship — each scheduler's schema carries only its own knobs, so
+    round trips and params hashes never drag inert fields along."""
+
+    rate: float = 0.0
+    burst_s: float = 0.25
+    ctrl_overhead_s: float = 5.5e-4
+
+    def __post_init__(self):
+        super().__post_init__()
+        _require(self.rate >= 0.0, f"rate must be >= 0, got {self.rate}")
+        _require(self.burst_s >= 0.0,
+                 f"burst_s must be >= 0, got {self.burst_s}")
+        _require(self.ctrl_overhead_s >= 0.0,
+                 f"ctrl_overhead_s must be >= 0, got {self.ctrl_overhead_s}")
+
+    def rate_eff(self, cfg) -> float:
+        """Effective per-job rate: configured, or an equal split of server
+        bandwidth over job slots when left at 0."""
+        return self.rate if self.rate > 0 else cfg.server_bw / cfg.max_jobs
+
+
+@dataclasses.dataclass(frozen=True)
+class TbfParams(_BucketParams):
+    """TBF (SC'17): classful token buckets at user-supplied ``rate`` (bytes/s
+    per job; 0 means ``server_bw / max_jobs``), HTC hard accounting and PSSB
+    conservative spare sharing."""
+
+    headroom: float = 0.8
+
+    legacy_knobs: ClassVar[Mapping[str, str]] = {
+        "mu_ticks": "gift_mu_ticks",
+        "rate": "tbf_rate",
+        "burst_s": "tbf_burst_s",
+        "headroom": "tbf_headroom",
+        "ctrl_overhead_s": "tbf_ctrl_overhead_s",
+    }
+
+    def __post_init__(self):
+        super().__post_init__()
+        _require(0.0 <= self.headroom <= 1.0,
+                 f"headroom must be in [0, 1], got {self.headroom}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptbfParams(_BucketParams):
+    """AdapTBF (arXiv:2602.22409): TBF's buckets plus a per-μ decentralized
+    borrow exchange.  Shares the bucket base's ``rate`` (legacy shim maps it
+    to ``tbf_rate``) with the calibrated AdapTBF depth/overhead defaults;
+    ``repay`` is the per-μ repayment decay on the borrowed-token ledger."""
+
+    burst_s: float = 1.0
+    ctrl_overhead_s: float = 1e-4    # no rule engine: local bucket ops only
+    repay: float = 0.25
+
+    legacy_knobs: ClassVar[Mapping[str, str]] = {
+        "mu_ticks": "gift_mu_ticks",
+        "rate": "tbf_rate",
+        "burst_s": "adaptbf_burst_s",
+        "repay": "adaptbf_repay",
+        "ctrl_overhead_s": "adaptbf_ctrl_overhead_s",
+    }
+
+    def __post_init__(self):
+        super().__post_init__()
+        _require(0.0 <= self.repay <= 1.0,
+                 f"repay must be in [0, 1], got {self.repay}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanParams(_IntervalParams):
+    """Plan-based lookahead (arXiv:2109.00082): per-μ EFT plan over a qcount
+    EMA; ``ema_alpha`` is the history weight per μ."""
+
+    ema_alpha: float = 0.3
+    ctrl_overhead_s: float = 2e-4
+
+    legacy_knobs: ClassVar[Mapping[str, str]] = {
+        "mu_ticks": "gift_mu_ticks",
+        "ema_alpha": "plan_ema_alpha",
+        "ctrl_overhead_s": "plan_ctrl_overhead_s",
+    }
+
+    def __post_init__(self):
+        super().__post_init__()
+        _require(0.0 < self.ema_alpha <= 1.0,
+                 f"ema_alpha must be in (0, 1], got {self.ema_alpha}")
+        _require(self.ctrl_overhead_s >= 0.0,
+                 f"ctrl_overhead_s must be >= 0, got {self.ctrl_overhead_s}")
+
+
+#: Legacy flat EngineConfig attributes covered by the shim, in declaration
+#: order.  EngineConfig.__post_init__ warns when any of them is set; the
+#: schemas above are the only readers.
+LEGACY_FLAT_KNOBS = (
+    "gift_mu_ticks", "gift_coupon_frac", "gift_ctrl_overhead_s",
+    "tbf_rate", "tbf_burst_s", "tbf_headroom", "tbf_ctrl_overhead_s",
+    "adaptbf_burst_s", "adaptbf_repay", "adaptbf_ctrl_overhead_s",
+    "plan_ema_alpha", "plan_ctrl_overhead_s",
+)

@@ -93,6 +93,19 @@ class Policy:
         chain = named.get(spec, spec)
         if chain is None:
             raise ValueError("'fifo' is a baseline scheduler, not a token policy")
+        if spec not in named:
+            # Not a known name: it must be a well-formed entity chain.  A
+            # misspelled named policy ("user-fiar") must fail loudly here,
+            # not fall through to a confusing chain-grammar error.
+            tokens = [part.strip().partition(":")[0].strip()
+                      for part in chain.split(",")]
+            if not all(t in ENTITIES for t in tokens):
+                known = ", ".join(sorted(k for k, v in named.items() if v))
+                raise ValueError(
+                    f"unknown policy {spec!r}. Known named policies: {known}. "
+                    f"Or give an 'entity[:weight],...' chain with entities "
+                    f"{ENTITIES} and weights {WEIGHTS}, "
+                    f"e.g. 'group:fair,user:fair,job:size'.")
         levels = []
         for part in chain.split(","):
             entity, _, weight = part.strip().partition(":")

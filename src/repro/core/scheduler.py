@@ -21,8 +21,15 @@ All hooks take plain arrays (no engine state), so one implementation serves
 both planes.  Shapes: ``S`` servers, ``J`` job slots; every per-server hook
 operates row-wise, so a plane may pass a single-row slice.
 
+Each scheduler *owns its parameter schema* (``params_cls``, a frozen
+dataclass from :mod:`repro.core.params`): hooks call ``self.params(cfg)``,
+which resolves ``EngineConfig.scheduler_params`` (or the legacy flat-knob
+shim) into that schema.  The engine config itself carries no
+scheduler-specific fields.
+
 Register a new scheduler with the decorator and it becomes addressable from
-``EngineConfig(scheduler=...)`` and ``BBCluster(scheduler=...)`` alike::
+``EngineConfig(scheduler=...)``, ``BBCluster(scheduler=...)`` and
+``repro.api.Experiment(scheduler=...)`` alike::
 
     from repro.core.scheduler import Scheduler, register
 
@@ -38,7 +45,7 @@ from typing import Callable, Dict, NamedTuple, Type
 import jax
 import jax.numpy as jnp
 
-from . import baselines
+from . import baselines, params as params_
 from .baselines import AuxState
 from .global_sync import local_segments
 from .job_table import JobTable
@@ -66,6 +73,25 @@ class Scheduler:
     name: str = ""
     uses_segments: bool = False   # participates in the λ-sync segment exchange
     has_intervals: bool = False   # needs μ-interval budget updates to progress
+    #: The frozen parameter schema this scheduler owns (repro.core.params).
+    params_cls: Type[params_.SchedulerParams] = params_.SchedulerParams
+
+    # -- parameters ----------------------------------------------------------
+    def params(self, cfg) -> params_.SchedulerParams:
+        """Resolve this scheduler's schema from ``cfg`` (explicit
+        ``scheduler_params`` wins; else the legacy flat-knob shim)."""
+        return self.params_cls.resolve(cfg)
+
+    def mu_ticks(self, cfg) -> int:
+        """μ-interval cadence in ticks; meaningful for ``has_intervals``
+        schedulers, a harmless default for the rest (their refill /
+        interval_update hooks are no-ops)."""
+        p = self.params(cfg)
+        return getattr(p, "mu_ticks", params_.DEFAULT_MU_TICKS)
+
+    def mu_s(self, cfg) -> float:
+        """μ-interval cadence in seconds (``mu_ticks`` × engine ``dt``)."""
+        return self.mu_ticks(cfg) * cfg.dt
 
     # -- state ---------------------------------------------------------------
     def init_aux(self, n_servers: int, max_jobs: int) -> AuxState:
@@ -73,7 +99,7 @@ class Scheduler:
 
     def ctrl_overhead_s(self, cfg) -> float:
         """Fixed per-request control-path cost charged to service time."""
-        return 0.0
+        return getattr(self.params(cfg), "ctrl_overhead_s", 0.0)
 
     # -- per-tick bookkeeping ------------------------------------------------
     def refill(self, cfg, aux: AuxState, dt_s: float) -> AuxState:
@@ -82,7 +108,7 @@ class Scheduler:
 
     def interval_update(self, cfg, aux: AuxState, qcount) -> AuxState:
         """One μ boundary: recompute interval budgets/quotas. Unconditional —
-        the engine fires it every ``gift_mu_ticks``; the functional plane
+        the engine fires it every ``mu_ticks(cfg)``; the functional plane
         fires it when its virtual clock passes a μ."""
         return aux
 
@@ -106,14 +132,16 @@ class Scheduler:
 
 
 class _IntervalScheduler(Scheduler):
-    """Shared engine-path cadence for μ-interval schedulers (GIFT, TBF)."""
+    """Shared engine-path cadence for μ-interval schedulers (GIFT, TBF,
+    AdapTBF, plan)."""
 
     has_intervals = True
+    params_cls = params_._IntervalParams
 
     def pre_tick(self, cfg, aux: AuxState, qcount, t) -> AuxState:
         aux = self.refill(cfg, aux, cfg.dt)
         return jax.lax.cond(
-            jnp.mod(t, cfg.gift_mu_ticks) == 0,
+            jnp.mod(t, self.mu_ticks(cfg)) == 0,
             lambda a: self.interval_update(cfg, a, qcount),
             lambda a: a, aux)
 
@@ -155,6 +183,7 @@ class ThemisScheduler(Scheduler):
     uniform draws."""
 
     uses_segments = True
+    params_cls = params_.ThemisParams
 
     def tick_shares(self, cfg, table: JobTable, view: TickView) -> jnp.ndarray:
         demand = view.qcount > 0
@@ -175,6 +204,8 @@ class ThemisScheduler(Scheduler):
 class FifoScheduler(Scheduler):
     """Arrival-order across jobs (production default, paper §1)."""
 
+    params_cls = params_.FifoParams
+
     def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
         return baselines.fifo_select(head_time, demand)
 
@@ -184,13 +215,12 @@ class GiftScheduler(_IntervalScheduler):
     """BSIP equal-share with μ-interval budgets + throttle-and-reward coupons
     (paper §5.4 reference re-implementation)."""
 
-    def ctrl_overhead_s(self, cfg) -> float:
-        return cfg.gift_ctrl_overhead_s
+    params_cls = params_.GiftParams
 
     def interval_update(self, cfg, aux, qcount):
+        p = self.params(cfg)
         return baselines.gift_interval(
-            aux, qcount, cfg.gift_mu_ticks * cfg.dt, cfg.server_bw,
-            cfg.gift_coupon_frac)
+            aux, qcount, self.mu_s(cfg), cfg.server_bw, p.coupon_frac)
 
     def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
         return baselines.gift_select(aux, demand, key)
@@ -204,17 +234,17 @@ class TbfScheduler(_IntervalScheduler):
     """Per-job token bucket (user-supplied rate) with HTC hard compensation
     and PSSB proportional spare sharing (paper §5.4)."""
 
-    def ctrl_overhead_s(self, cfg) -> float:
-        return cfg.tbf_ctrl_overhead_s
+    params_cls = params_.TbfParams
 
     def refill(self, cfg, aux, dt_s):
-        rate = cfg.tbf_rate_eff()
-        return baselines.tbf_refill(aux, rate, dt_s, rate * cfg.tbf_burst_s)
+        p = self.params(cfg)
+        rate = p.rate_eff(cfg)
+        return baselines.tbf_refill(aux, rate, dt_s, rate * p.burst_s)
 
     def interval_update(self, cfg, aux, qcount):
+        p = self.params(cfg)
         return baselines.tbf_interval(
-            aux, cfg.gift_mu_ticks * cfg.dt, cfg.server_bw,
-            cfg.tbf_rate_eff(), cfg.tbf_headroom)
+            aux, self.mu_s(cfg), cfg.server_bw, p.rate_eff(cfg), p.headroom)
 
     def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
         return baselines.tbf_select(aux, demand, req_bytes, key)
@@ -228,21 +258,20 @@ class AdaptbfScheduler(_IntervalScheduler):
     """AdapTBF (arXiv:2602.22409): per-job token buckets that *borrow* unused
     tokens from under-demanding peers each μ — a decentralized waterfilling
     match of donor surplus to borrower deficits, with repayment decay on the
-    borrowed ledger.  Shares TBF's per-job rate (``tbf_rate_eff``) so the two
-    differ only in what happens to unused entitlement."""
+    borrowed ledger.  Its params schema shares TBF's per-job ``rate`` so
+    the two differ only in what happens to unused entitlement."""
 
-    def ctrl_overhead_s(self, cfg) -> float:
-        return cfg.adaptbf_ctrl_overhead_s
+    params_cls = params_.AdaptbfParams
 
     def refill(self, cfg, aux, dt_s):
-        rate = cfg.tbf_rate_eff()
-        return baselines.adaptbf_refill(aux, rate, dt_s,
-                                        rate * cfg.adaptbf_burst_s)
+        p = self.params(cfg)
+        rate = p.rate_eff(cfg)
+        return baselines.adaptbf_refill(aux, rate, dt_s, rate * p.burst_s)
 
     def interval_update(self, cfg, aux, qcount):
+        p = self.params(cfg)
         return baselines.adaptbf_interval(
-            aux, qcount, cfg.gift_mu_ticks * cfg.dt, cfg.server_bw,
-            cfg.adaptbf_repay)
+            aux, qcount, self.mu_s(cfg), cfg.server_bw, p.repay)
 
     def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
         return baselines.adaptbf_select(aux, demand, req_bytes, key)
@@ -259,11 +288,11 @@ class PlanScheduler(_IntervalScheduler):
     plan order — smallest estimated remaining demand first — falling back to
     FIFO whenever the plan has no eligible entry."""
 
-    def ctrl_overhead_s(self, cfg) -> float:
-        return cfg.plan_ctrl_overhead_s
+    params_cls = params_.PlanParams
 
     def interval_update(self, cfg, aux, qcount):
-        return baselines.plan_interval(aux, qcount, cfg.plan_ema_alpha)
+        return baselines.plan_interval(aux, qcount,
+                                       self.params(cfg).ema_alpha)
 
     def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
         return baselines.plan_select(aux, head_time, demand)

@@ -1,0 +1,130 @@
+"""Scheduler-owned parameter schemas: registry coverage, validation, and the
+legacy flat-knob deprecation shim (PR-3 acceptance: legacy construction and
+explicit ``scheduler_params`` produce bit-identical ``run()`` traces)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AdaptbfParams, EngineConfig, GiftParams, PlanParams,
+                        SchedulerParams, TbfParams, available_schedulers,
+                        get_scheduler, make_workload, run)
+from repro.core.params import LEGACY_FLAT_KNOBS
+
+JOBS = [dict(user=0, size=1, procs=8, req_mb=10, end_s=1),
+        dict(user=1, size=1, procs=8, req_mb=10, end_s=1)]
+
+#: Deliberately non-default values per interval scheduler, exercising every
+#: legacy-mapped field.
+NON_DEFAULT = {
+    "gift": GiftParams(mu_ticks=200, coupon_frac=0.3, ctrl_overhead_s=1e-4),
+    "tbf": TbfParams(mu_ticks=300, rate=2e9, burst_s=0.5, headroom=0.6,
+                     ctrl_overhead_s=1e-4),
+    "adaptbf": AdaptbfParams(mu_ticks=250, rate=1e9, burst_s=0.7, repay=0.5,
+                             ctrl_overhead_s=2e-4),
+    "plan": PlanParams(mu_ticks=400, ema_alpha=0.5, ctrl_overhead_s=1e-4),
+}
+
+
+def _run(cfg):
+    wl, table = make_workload(cfg, JOBS)
+    return run(cfg, wl, table, 1.0)
+
+
+class TestRegistrySchemas:
+    """Every scheduler must expose a Params schema with working defaults."""
+
+    @pytest.mark.parametrize("sched", available_schedulers())
+    def test_schema_exists_with_defaults(self, sched):
+        cls = get_scheduler(sched).params_cls
+        assert issubclass(cls, SchedulerParams)
+        p = cls()          # defaults must construct
+        assert dataclasses.is_dataclass(p)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            setattr(p, "mu_ticks", 1)
+
+    @pytest.mark.parametrize("sched", available_schedulers())
+    def test_resolves_from_default_config(self, sched):
+        sobj = get_scheduler(sched)
+        cfg = EngineConfig(scheduler=sched)
+        p = sobj.params(cfg)
+        assert isinstance(p, sobj.params_cls)
+        assert p == sobj.params_cls()            # defaults all the way down
+        assert isinstance(p.params_hash(), str) and len(p.params_hash()) == 12
+
+    @pytest.mark.parametrize("sched", available_schedulers())
+    def test_legacy_knob_names_exist_on_engine_config(self, sched):
+        """Every legacy mapping target must still be a (shim) config field."""
+        cls = get_scheduler(sched).params_cls
+        cfg = EngineConfig()
+        for field, legacy in cls.legacy_knobs.items():
+            assert legacy in LEGACY_FLAT_KNOBS
+            assert hasattr(cfg, legacy)
+            assert field in {f.name for f in dataclasses.fields(cls)}
+
+    def test_params_type_mismatch_raises(self):
+        cfg = EngineConfig(scheduler="gift", scheduler_params=TbfParams())
+        with pytest.raises(TypeError, match="GiftParams"):
+            get_scheduler("gift").params(cfg)
+
+    def test_adaptbf_schema_carries_no_inert_tbf_fields(self):
+        """AdapTBF never reads PSSB headroom; the schema must not carry it,
+        or round trips and params hashes would drag an inert value along."""
+        fields = {f.name for f in dataclasses.fields(AdaptbfParams)}
+        assert "headroom" not in fields
+        assert {"rate", "burst_s", "repay", "mu_ticks",
+                "ctrl_overhead_s"} <= fields
+        # every schema field round-trips through the legacy knobs
+        assert set(AdaptbfParams.legacy_knobs) == fields
+
+
+class TestValidation:
+    def test_out_of_range_values_fail_at_construction(self):
+        with pytest.raises(ValueError, match="coupon_frac"):
+            GiftParams(coupon_frac=1.5)
+        with pytest.raises(ValueError, match="headroom"):
+            TbfParams(headroom=-0.1)
+        with pytest.raises(ValueError, match="repay"):
+            AdaptbfParams(repay=2.0)
+        with pytest.raises(ValueError, match="ema_alpha"):
+            PlanParams(ema_alpha=0.0)
+        with pytest.raises(ValueError, match="mu_ticks"):
+            GiftParams(mu_ticks=0)
+        with pytest.raises(ValueError, match="rate"):
+            TbfParams(rate=-1.0)
+
+
+class TestLegacyShim:
+    def test_flat_knob_construction_warns(self):
+        with pytest.warns(DeprecationWarning, match="tbf_burst_s"):
+            EngineConfig(scheduler="tbf", tbf_burst_s=0.5)
+
+    def test_clean_construction_does_not_warn(self):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            EngineConfig(scheduler="tbf", scheduler_params=TbfParams())
+            EngineConfig(scheduler="themis")
+
+    @pytest.mark.parametrize("sched", sorted(NON_DEFAULT))
+    def test_round_trip_flat_knobs_match_schema(self, sched):
+        """``Params -> to_legacy_knobs -> from_engine_config`` is lossless."""
+        p = NON_DEFAULT[sched]
+        with pytest.warns(DeprecationWarning):
+            cfg = EngineConfig(scheduler=sched, **p.to_legacy_knobs())
+        assert get_scheduler(sched).params(cfg) == p
+
+    @pytest.mark.parametrize("sched", sorted(NON_DEFAULT))
+    def test_legacy_and_params_traces_bit_identical(self, sched):
+        """The acceptance bar: same values through the flat knobs and through
+        ``scheduler_params`` produce bit-identical run() traces."""
+        p = NON_DEFAULT[sched]
+        base = dict(n_servers=1, max_jobs=8, n_workers=4, scheduler=sched)
+        with pytest.warns(DeprecationWarning):
+            cfg_old = EngineConfig(**base, **p.to_legacy_knobs())
+        cfg_new = EngineConfig(**base, scheduler_params=p)
+        r_old, r_new = _run(cfg_old), _run(cfg_new)
+        for key in ("gbps", "issued", "completed"):
+            np.testing.assert_array_equal(r_old[key], r_new[key])
+        assert r_old["dropped"] == r_new["dropped"]
+        assert r_old["idle_worker_ticks"] == r_new["idle_worker_ticks"]

@@ -102,6 +102,28 @@ class TestPolicyParsing:
         with pytest.raises(ValueError):
             Policy.parse("fifo")
 
+    def test_misspelled_named_policy_fails_loudly(self):
+        """A typo'd name must not fall through to the chain parser — the
+        error lists the known named policies and the chain grammar."""
+        with pytest.raises(ValueError, match="Known named policies"):
+            Policy.parse("user-fiar")
+        with pytest.raises(ValueError) as ei:
+            Policy.parse("size_fair")
+        msg = str(ei.value)
+        assert "size-fair" in msg and "entity" in msg
+
+    def test_misspelled_chain_entity_fails_loudly(self):
+        with pytest.raises(ValueError, match="Known named policies"):
+            Policy.parse("grp:fair,job:fair")
+
+    def test_bare_entity_chain_still_parses(self):
+        """Backward compatibility: chain specs with real entities (weight
+        defaulting to fair, job level auto-appended) keep working."""
+        p = Policy.parse("user")
+        assert [l.entity for l in p.levels] == ["user", "job"]
+        p = Policy.parse("group:size")
+        assert p.levels[0].weight == "size"
+
 
 @st.composite
 def job_specs(draw):
