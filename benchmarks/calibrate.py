@@ -1,0 +1,179 @@
+"""Calibrate AdapTBF / plan-based knobs against their papers' operating points.
+
+The paper's competitor claims (+13.5–13.7% throughput, 19.5–40.4% lower
+variation) are only honest if the competitors' knobs are tuned the way their
+own papers tune them — Kopanski's burst-buffer study makes the same point
+about plan-based baselines being parameter-sensitive.  This tool sweeps each
+adaptive competitor's knobs over the fig12 contention workload **in one
+compile per scheduler** (traced params + ``Experiment.sweep``) and scores
+every grid point against the source paper's stated objective:
+
+  * **AdapTBF** (Rashid & Dai, arXiv:2602.22409) — decentralized borrowing
+    should keep utilization *near work-conserving* while restoring fairness.
+    Operating point: among grid points whose sustained throughput is within
+    ``UTIL_TOL`` of the best point, maximize the Jain index (tie-break:
+    throughput).  Swept: ``burst_s`` (bucket depth) × ``repay`` (per-μ
+    repayment decay).
+  * **plan-based** (Kopanski & Rzadca, arXiv:2109.00082) — plans exist to cut
+    short-job waiting: the paper optimizes waiting time / slowdown.
+    Operating point: minimize the later-arriving job's slowdown vs its solo
+    run (tie-break: Jain).  Swept: ``ema_alpha`` (demand-estimator history
+    weight).
+
+The chosen points are committed as the schema defaults in
+``repro/core/params.py`` (pinned by ``tests/test_params.py``); ``--check``
+re-runs the sweep and exits 1 if the argbest drifts off the shipped
+defaults, so a recalibration is an explicit decision, not silent rot.
+
+    PYTHONPATH=src python -m benchmarks.calibrate               # both tables
+    PYTHONPATH=src python -m benchmarks.calibrate adaptbf --check
+    BENCH_SECONDS=5 BENCH_SEEDS=2 ... calibrate --json CALIB.json
+
+``BENCH_SECONDS`` / ``BENCH_SEEDS`` shrink the workload exactly like the
+other benchmarks (the shipped defaults were chosen at 12 s × 4 seeds).
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from repro.api import Experiment
+from repro.core import AdaptbfParams, PlanParams
+
+from .bench_comparison import make_jobs
+from .common import bench_seconds, bench_seeds, emit
+
+#: Sustained throughput within 3% of the best grid point counts as
+#: "near work-conserving" (AdapTBF's utilization claim).
+UTIL_TOL = 0.03
+#: Jain / slowdown differences below these are measurement ties; the
+#: deterministic tie-break below decides, not float noise.
+JAIN_TOL = 5e-4
+SD_TOL = 0.01
+
+ADAPTBF_GRID = {"burst_s": [0.25, 0.5, 1.0, 2.0, 4.0],
+                "repay": [0.1, 0.25, 0.5, 0.75]}
+PLAN_GRID = {"ema_alpha": [0.1, 0.2, 0.3, 0.5, 0.7, 0.9]}
+
+
+def _experiment(scheduler: str, seconds: float) -> Experiment:
+    # The exact fig12 contention shape (bench_comparison.make_jobs), so the
+    # calibrated defaults correspond to the benchmark they are pinned by.
+    return (Experiment(policy="job-fair", scheduler=scheduler)
+            .add_jobs(make_jobs(seconds)))
+
+
+def calibrate_adaptbf(seconds: float, seeds) -> tuple[list, dict]:
+    exp = _experiment("adaptbf", seconds)
+    sw = exp.sweep(ADAPTBF_GRID, seconds, seeds=seeds)
+    w0, w1 = seconds / 3, 2 * seconds / 3      # both-jobs-active window
+    thr_m, thr_c = sw.mean_gbps(None, w0, w1)
+    jain_m, _ = sw.jain_fairness(w0, w1)
+    near_wc = thr_m >= (1.0 - UTIL_TOL) * thr_m.max()
+    # Among near-work-conserving points, take the Jain plateau; within it
+    # the tie-break is deterministic *least mechanism*: the shallowest
+    # bucket, then the gentlest repayment, that reaches the operating point
+    # — float noise must never flip the shipped default.
+    jain_best = jain_m[near_wc].max()
+    tied = near_wc & (jain_m >= jain_best - JAIN_TOL)
+    best = min(np.flatnonzero(tied),
+               key=lambda i: (sw.points[i].burst_s, sw.points[i].repay))
+    rows = []
+    for i, p in enumerate(sw.points):
+        tag = " <-- chosen" if i == best else ("" if near_wc[i] else " (throttles)")
+        rows.append((f"calib_adaptbf_b{p.burst_s:g}_r{p.repay:g}", "0",
+                     f"{thr_m[i]:.2f}GB/s jain {jain_m[i]:.4f}{tag}"))
+    chosen = sw.points[best]
+    report = {"scheduler": "adaptbf", "objective":
+              f"max jain s.t. throughput >= {1 - UTIL_TOL:.0%} of best",
+              "chosen": {"burst_s": float(chosen.burst_s),
+                         "repay": float(chosen.repay)},
+              "params_hash": chosen.params_hash(),
+              "summary": sw.summary(w0, w1)}
+    return rows, report
+
+
+def calibrate_plan(seconds: float, seeds) -> tuple[list, dict]:
+    exp = _experiment("plan", seconds)
+    solo = exp.solo(1, seconds)                # the short job, uncontended
+    sw = exp.sweep(PLAN_GRID, seconds, seeds=seeds)
+    w0, w1 = 0.30 * seconds, 0.73 * seconds    # the short job's window
+    sd_m, _ = sw.slowdown(solo, job=1, t0=w0, t1=w1)
+    jain_m, _ = sw.jain_fairness(w0, w1)
+    # Slowdown plateau, then the smoothest estimator (smallest α) within it:
+    # plan stability is the paper's secondary concern and float noise must
+    # never flip the shipped default.
+    tied = sd_m <= sd_m.min() + SD_TOL
+    best = min(np.flatnonzero(tied), key=lambda i: sw.points[i].ema_alpha)
+    rows = []
+    for i, p in enumerate(sw.points):
+        tag = " <-- chosen" if i == best else ""
+        rows.append((f"calib_plan_a{p.ema_alpha:g}", "0",
+                     f"slowdown {sd_m[i]:.3f} jain {jain_m[i]:.4f}{tag}"))
+    chosen = sw.points[best]
+    report = {"scheduler": "plan",
+              "objective": "min slowdown of the later job vs solo",
+              "chosen": {"ema_alpha": float(chosen.ema_alpha)},
+              "params_hash": chosen.params_hash(),
+              "summary": sw.summary(w0, w1, solo=solo, job=1)}
+    return rows, report
+
+
+SECTIONS = {"adaptbf": calibrate_adaptbf, "plan": calibrate_plan}
+
+#: field -> shipped default, per calibrated scheduler (what --check pins).
+SHIPPED = {
+    "adaptbf": {"burst_s": AdaptbfParams().burst_s,
+                "repay": AdaptbfParams().repay},
+    "plan": {"ema_alpha": PlanParams().ema_alpha},
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.calibrate", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("schedulers", nargs="*", choices=[*SECTIONS, []],
+                    help="which calibrations to run (default: all)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the argbest drifts off the shipped defaults")
+    ap.add_argument("--json", dest="json_path",
+                    help="write per-point reports to this path")
+    args = ap.parse_args(argv)
+    want = args.schedulers or list(SECTIONS)
+    check, json_path = args.check, args.json_path
+    seconds, seeds = bench_seconds(12.0), bench_seeds(tuple(range(4)))
+    if check and (seconds, len(seeds)) != (12.0, 4):
+        # The shipped defaults were chosen at 12 s x 4 seeds; an env-shrunk
+        # sweep lands on a different plateau point and would report drift
+        # that is really just a different horizon.
+        print("--check requires the calibration horizon (12 s x 4 seeds); "
+              f"got {seconds} s x {len(seeds)} seeds via BENCH_SECONDS/"
+              "BENCH_SEEDS — unset them or drop --check", file=sys.stderr)
+        return 2
+    print("name,us_per_call,derived")
+    reports, drift = {}, []
+    for name in want:
+        rows, report = SECTIONS[name](seconds, seeds)
+        emit(rows)
+        reports[name] = report
+        if check:
+            for field, shipped in SHIPPED[name].items():
+                got = report["chosen"][field]
+                if abs(got - shipped) > 1e-9:
+                    drift.append(f"{name}.{field}: calibrated {got!r} != "
+                                 f"shipped default {shipped!r}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"seconds": seconds, "seeds": list(map(int, seeds)),
+                       "reports": reports}, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
+    for d in drift:
+        print(f"DRIFT {d} — rerun benchmarks/calibrate.py and either update "
+              "repro/core/params.py defaults or the grid", file=sys.stderr)
+    return 1 if drift else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,11 +25,18 @@ scheduler-specific fields.  Results are structured: per-job throughput bins,
 mean/CoV, Jain fairness index, slowdown vs a solo run, and the dropped /
 idle-worker counters, with dict-style access kept for the legacy
 ``repro.core.metrics`` helpers.
+
+Parameter sweeps are first-class: because the params schemas are pytrees
+whose numeric knobs are traced leaves, ``exp.sweep(grid, seconds, seeds=...)``
+runs P grid points × K seeds through ONE engine compile and returns a
+:class:`SweepResult` with per-point Jain / CoV / slowdown reductions — the
+workhorse of ``benchmarks/calibrate.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional, Sequence
+import itertools
+from typing import Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -192,6 +199,113 @@ class BatchRunResult(RunResult):
         return metrics.mean_cov(self.seed_metric(fn))
 
 
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Outcome of :meth:`Experiment.sweep`: P param points × K seeds from one
+    compile.  Every array carries leading ``[P, K]`` axes; ``points[i]`` is
+    the concrete params instance of grid point ``i``."""
+
+    scheduler: str
+    policy: Optional[str]
+    points: tuple                 # SchedulerParams per grid point
+    seeds: np.ndarray
+    n_jobs: int
+    seconds: float
+    gbps: np.ndarray              # f32[P, K, J, NB]
+    bin_s: float
+    issued: np.ndarray            # i32[P, K, J]
+    completed: np.ndarray         # i32[P, K, J]
+    dropped: np.ndarray           # i32[P, K]
+    idle_worker_ticks: np.ndarray  # i32[P, K]
+    ticks: int
+
+    @property
+    def n_points(self) -> int:
+        return len(self.points)
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.seeds)
+
+    def point(self, i: int) -> SchedulerParams:
+        return self.points[i]
+
+    def point_result(self, i: int) -> BatchRunResult:
+        """Slice one grid point into a :class:`BatchRunResult` (each of its
+        seed lanes is bit-identical to a sequential ``run`` with
+        ``params=points[i]``)."""
+        return BatchRunResult(
+            scheduler=self.scheduler, params=self.points[i],
+            policy=self.policy, n_jobs=self.n_jobs, seconds=self.seconds,
+            gbps=self.gbps[i], bin_s=self.bin_s, issued=self.issued[i],
+            completed=self.completed[i], dropped=self.dropped[i],
+            idle_worker_ticks=self.idle_worker_ticks[i], ticks=self.ticks,
+            seeds=self.seeds)
+
+    def per_point(self) -> list[BatchRunResult]:
+        return [self.point_result(i) for i in range(self.n_points)]
+
+    def point_mean_cov(self, fn) -> tuple[np.ndarray, np.ndarray]:
+        """Reduce a per-run metric ``fn(RunResult) -> float`` to per-point
+        (mean[P], cov[P]) over the seed axis."""
+        pairs = [b.mean_cov(fn) for b in self.per_point()]
+        means, covs = zip(*pairs)
+        return np.asarray(means), np.asarray(covs)
+
+    # -- the paper-shaped reductions ----------------------------------------
+    def jain_fairness(self, t0: float = 0.0, t1: Optional[float] = None):
+        """Per-point (mean, cov) of the Jain index over the window."""
+        return self.point_mean_cov(lambda r: r.jain_fairness(t0, t1))
+
+    def mean_gbps(self, job: Optional[int] = None, t0: float = 0.0,
+                  t1: Optional[float] = None):
+        """Per-point (mean, cov) of mean throughput (one job or aggregate)."""
+        return self.point_mean_cov(lambda r: r.mean_gbps(job, t0, t1))
+
+    def cov_gbps(self, job: Optional[int] = None, t0: float = 0.0,
+                 t1: Optional[float] = None):
+        """Per-point (mean, cov) of the per-bin throughput CoV — the shape
+        the paper's variation claims are stated in."""
+        return self.point_mean_cov(lambda r: r.cov_gbps(job, t0, t1))
+
+    def slowdown(self, solo: RunResult, job: int = 0, t0: float = 0.0,
+                 t1: Optional[float] = None):
+        """Per-point (mean, cov) slowdown of ``job`` vs a solo baseline."""
+        return self.point_mean_cov(lambda r: r.slowdown(solo, job, t0, t1))
+
+    def summary(self, t0: float = 0.0, t1: Optional[float] = None,
+                solo: Optional[RunResult] = None, job: int = 0) -> list[dict]:
+        """One JSON-ready dict per grid point: the point's numeric fields and
+        params hash plus Jain / aggregate-throughput / CoV (and slowdown when
+        a ``solo`` baseline is supplied) as seed-mean ± cov."""
+        jain_m, jain_c = self.jain_fairness(t0, t1)
+        thr_m, thr_c = self.mean_gbps(None, t0, t1)
+        cov_m, _ = self.cov_gbps(job, t0, t1)
+        sd_m = sd_c = None
+        if solo is not None:
+            sd_m, sd_c = self.slowdown(solo, job, t0, t1)
+        rows = []
+        for i, p in enumerate(self.points):
+            row = {"point": i, "params_hash": p.params_hash(),
+                   "scheduler": self.scheduler}
+            row.update({f: float(getattr(p, f)) for f in p.numeric_fields()})
+            row.update(jain_mean=float(jain_m[i]), jain_cov=float(jain_c[i]),
+                       gbps_mean=float(thr_m[i]), gbps_cov=float(thr_c[i]),
+                       cov_gbps=float(cov_m[i]),
+                       dropped=int(self.dropped[i].sum()),
+                       idle_worker_ticks=int(self.idle_worker_ticks[i].sum()))
+            if sd_m is not None:
+                row.update(slowdown_mean=float(sd_m[i]),
+                           slowdown_cov=float(sd_c[i]))
+            rows.append(row)
+        return rows
+
+    def argbest(self, fn, mode: str = "max") -> int:
+        """Grid point index optimizing the seed-mean of ``fn(RunResult)``."""
+        means, _ = self.point_mean_cov(fn)
+        return int(np.argmax(means) if mode == "max" else np.argmin(means))
+
+
 @dataclasses.dataclass
 class ExperimentService:
     """The functional-plane side of an :class:`Experiment`: a live
@@ -350,6 +464,57 @@ class Experiment:
             idle_worker_ticks=raw["idle_worker_ticks"],
             ticks=raw["ticks"], state=raw["state"], seeds=raw["seeds"])
 
+    def _expand_grid(self, grid) -> list[SchedulerParams]:
+        """A grid is either a sequence of concrete params instances, or a
+        mapping ``{field: values}`` expanded as a cross product over this
+        spec's base params (``params=`` at construction, else the schema
+        defaults)."""
+        cls = self.sched.params_cls
+        if isinstance(grid, Mapping):
+            base = self.params if self.params is not None else cls()
+            names = list(grid)
+            unknown = [n for n in names if n not in cls.numeric_fields()]
+            if unknown:
+                raise ValueError(
+                    f"sweep grid names {unknown} are not numeric fields of "
+                    f"{cls.__name__} (sweepable: {cls.numeric_fields()})")
+            return [dataclasses.replace(base, **dict(zip(names, combo)))
+                    for combo in itertools.product(*(grid[n] for n in names))]
+        points = list(grid)
+        if not points:
+            raise ValueError("sweep() needs at least one grid point")
+        for p in points:
+            if type(p) is not cls:
+                raise TypeError(
+                    f"scheduler {self.scheduler!r} expects exactly "
+                    f"{cls.__name__} grid points, got {type(p).__name__}")
+        return points
+
+    def sweep(self, grid, seconds: float,
+              seeds: Sequence[int] = tuple(range(4))) -> SweepResult:
+        """One compile for the whole grid: P param points × K seeds.
+
+        ``grid`` is a sequence of params instances or a ``{field: values}``
+        mapping (cross product).  Numeric knobs are traced leaves, so every
+        point shares one XLA executable; structural fields (``mu_ticks``)
+        must be constant across the grid.  Each ``(point, seed)`` lane is
+        bit-identical to ``Experiment(params=point).run(seconds)`` with that
+        seed (pinned by ``tests/test_sweep.py``).
+        """
+        if not self.jobs:
+            raise ValueError("sweep() needs at least one add_job()")
+        points = self._expand_grid(grid)
+        cfg, wl, table = self.build()
+        raw = run_batch(cfg, wl, table, seconds, seeds=seeds,
+                        params_points=points)
+        return SweepResult(
+            scheduler=self.scheduler, policy=self._policy_name(),
+            points=tuple(points), seeds=raw["seeds"], n_jobs=len(self.jobs),
+            seconds=seconds, gbps=raw["gbps"], bin_s=raw["bin_s"],
+            issued=raw["issued"], completed=raw["completed"],
+            dropped=raw["dropped"],
+            idle_worker_ticks=raw["idle_worker_ticks"], ticks=raw["ticks"])
+
     def solo(self, job: int, seconds: float) -> RunResult:
         """Run one declared job alone (same engine config) — the baseline
         :meth:`RunResult.slowdown` compares against."""
@@ -361,11 +526,19 @@ class Experiment:
         clone.jobs = [dict(self.jobs[job])]
         return clone.run(seconds)
 
-    def serve(self, *, autodrain: bool = True, lam_s: float = 0.5,
+    def serve(self, *, autodrain: bool = True,
+              lam_s: Optional[float] = None,
               stripes: int = 1) -> ExperimentService:
         """Stand up the functional plane for this spec: a :class:`BBCluster`
         driven by the same scheduler object and params, plus one client per
-        declared job (job ids are 1-based to match the service's examples)."""
+        declared job (job ids are 1-based to match the service's examples).
+
+        ``lam_s`` (the service's λ-sync cadence) defaults to the engine
+        config's ``sync_ticks × dt``, so both planes sync segments at the
+        same virtual-time cadence unless explicitly overridden."""
+        cfg = self.engine_config()
+        if lam_s is None:
+            lam_s = cfg.sync_ticks * cfg.dt if cfg.sync_ticks > 0 else 0.5
         cluster = BBCluster(
             n_servers=self.n_servers,
             policy=self.policy if self.policy is not None else "job-fair",
@@ -376,8 +549,7 @@ class Experiment:
         # Same spec, both planes: hand the service the exact engine config
         # (incl. dt / engine_kw overrides the BBCluster ctor doesn't take),
         # so e.g. μ boundaries fall at identical virtual times.
-        cluster.cfg = dataclasses.replace(
-            self.engine_config(), policy=cluster.cfg.policy)
+        cluster.cfg = dataclasses.replace(cfg, policy=cluster.cfg.policy)
         clients = [
             BBClient(cluster,
                      JobMeta(job_id=j + 1, user=spec.get("user", 0),

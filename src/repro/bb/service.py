@@ -112,11 +112,12 @@ class BBServer:
         elif req.op == "unlink":
             fs.unlink(req.path)
 
-    def pop_order(self, sched: Scheduler, cfg: EngineConfig,
+    def pop_order(self, sched: Scheduler, cfg: EngineConfig, p,
                   shares: np.ndarray, slot_of: dict[int, int],
                   aux, key) -> Optional[Request]:
         """One worker pop: delegate the draw to the shared scheduler core.
 
+        ``p`` is the resolved scheduler params (concrete on this plane);
         ``shares`` is this server's row of the cluster's per-tick share table;
         ``aux`` is the cluster-wide scheduler state, sliced to this server's
         row so every Scheduler hook sees the same [S, J] layout as the engine.
@@ -141,7 +142,7 @@ class BBServer:
             return None
         aux_row = jax.tree.map(lambda x: x[self.sid:self.sid + 1], aux)
         idx = int(np.asarray(sched.select(
-            cfg, jnp.asarray(shares)[None, :], jnp.asarray(head_time),
+            cfg, p, jnp.asarray(shares)[None, :], jnp.asarray(head_time),
             jnp.asarray(qcount > 0), aux_row, jnp.asarray(req_bytes), key))[0])
         if idx < 0:
             return None
@@ -262,10 +263,11 @@ class BBCluster:
         global completion order (the observable the paper's policies shape)."""
         done: list[Request] = []
         cfg, sched = self.cfg, self.sched
-        mu_s = sched.mu_s(cfg)
-        # Params resolution builds a fresh frozen dataclass; hoist the
-        # per-request constant out of the worker loop like the engine does.
-        ctrl_s = sched.ctrl_overhead_s(cfg)
+        # Resolve the params schema once per drain — the same object the
+        # engine threads through its hooks, concrete on this plane.
+        p = sched.params(cfg)
+        mu_s = sched.mu_s(p, cfg.dt)
+        ctrl_s = float(sched.ctrl_overhead_s(p))
         stalls = 0
         while True:
             if sched.uses_segments and (
@@ -280,15 +282,15 @@ class BBCluster:
             if self.clock - self._last_interval >= mu_s:
                 elapsed = (mu_s if self._last_interval < -1e8
                            else self.clock - self._last_interval)
-                self.aux = sched.refill(cfg, self.aux, float(elapsed))
-                self.aux = sched.interval_update(cfg, self.aux, view.qcount)
+                self.aux = sched.refill(cfg, p, self.aux, float(elapsed))
+                self.aux = sched.interval_update(cfg, p, self.aux, view.qcount)
                 self._last_interval = self.clock
             shares = np.asarray(sched.tick_shares(cfg, self._table(), view))
             progressed = False
             for srv in self.servers:
                 for w in range(srv.n_workers):
                     self._key, sub = jax.random.split(self._key)
-                    req = srv.pop_order(sched, cfg, shares[srv.sid],
+                    req = srv.pop_order(sched, cfg, p, shares[srv.sid],
                                         self.slot_of, self.aux, sub)
                     if req is None:
                         continue
@@ -296,7 +298,8 @@ class BBCluster:
                     slot = self.slot_of[req.job.job_id]
                     nbytes = float(len(req.data) if req.data is not None
                                    else req.size)
-                    self.aux = sched.charge(cfg, self.aux, srv.sid, slot, nbytes)
+                    self.aux = sched.charge(cfg, p, self.aux, srv.sid, slot,
+                                            nbytes)
                     srv._execute(req)
                     t0 = max(srv.worker_free[w], self.clock)
                     srv.worker_free[w] = t0 + srv._service(req) + ctrl_s

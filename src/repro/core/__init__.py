@@ -3,11 +3,12 @@ opportunity fairness, lambda-delayed global fairness) plus the simulated
 burst-buffer testbed and the reference schedulers it is compared against."""
 from .policy import Policy, Level, job_fair, size_fair, user_fair, priority_fair
 from .params import (SchedulerParams, ThemisParams, FifoParams, GiftParams,
-                     TbfParams, AdaptbfParams, PlanParams)
+                     TbfParams, AdaptbfParams, PlanParams, stack_params)
 from .job_table import JobTable, make_table, empty_table, merge_tables
 from .tokens import opportunity_renorm, segments, select_job
 from .global_sync import sinkhorn_balance, sync_segments, local_segments, global_shares
 from .scheduler import (Scheduler, TickView, available_schedulers,
                         get_scheduler, register)
-from .engine import EngineConfig, Workload, make_workload, run, run_batch
+from .engine import (EngineConfig, Workload, make_workload, normalize_seed,
+                     prng_key, run, run_batch)
 from . import baselines, metrics

@@ -18,7 +18,7 @@ performance plane (``core.engine``) and the functional plane (``bb.service``)
 consume.
 
 Modeling notes (recorded per DESIGN.md §2; all constants are calibrated and
-overridable in EngineConfig):
+overridable through each scheduler's params schema, :mod:`repro.core.params`):
 
   * GIFT (Patel et al., FAST'20): every μ the coordinator snapshots pending
     I/O and splits the interval's bytes proportionally (BSIP); a job may not
@@ -28,7 +28,7 @@ overridable in EngineConfig):
     adaptation delay for newly arriving jobs, budget sawtooth variance,
     coupon-driven over-allocation after sharing phases.  The pause/resume +
     synchronous-progress bookkeeping of the BSIP enforcement path is modeled
-    as a fixed per-request control overhead (`gift_ctrl_overhead_s`).
+    as a fixed per-request control overhead (`GiftParams.ctrl_overhead_s`).
   * TBF (Qian et al., SC'17): classful token buckets filled at *user-supplied*
     rates; a request is admitted when its job's bucket covers it.  HTC makes
     deficit loans hard (bucket goes negative, job blocked until refilled);
@@ -37,7 +37,7 @@ overridable in EngineConfig):
     rates.  Structural effects captured: static rates cannot track dynamic
     demand (the paper's core criticism), spare-estimation lag, admission
     sawtooth.  The rule-engine admission path is a fixed per-request control
-    overhead (`tbf_ctrl_overhead_s`).
+    overhead (`TbfParams.ctrl_overhead_s`).
 
   * AdapTBF (Rashid & Dai): classful token buckets like TBF, but every μ the
     servers run a decentralized borrow exchange — jobs whose buckets exceed

@@ -16,6 +16,17 @@ the engine only ever talks to the Scheduler interface
 objects drive the functional plane (:mod:`repro.bb.service`), so both planes
 provably run one scheduling algorithm.
 
+Scheduler *parameters* are runtime data, not trace constants: the resolved
+params schema (:mod:`repro.core.params`) is a pytree whose numeric knobs are
+scalar leaves passed into the jitted scan as arguments.  The trace never
+depends on their values, which is what lets :func:`run_batch` with
+``params_points`` vmap P grid points × K seeds through ONE compile — the
+backbone of calibration sweeps (``benchmarks/calibrate.py``) that used to
+pay one compile per grid point.  (Sequential :func:`run` calls still build
+a fresh jit each, so batching over ``params_points`` — not looping — is how
+the single compile is realized.)  Only structural fields (``mu_ticks``)
+stay static.
+
 Time-accounting note: workers may start a request mid-tick (start = max(free
 time, tick start)), so tick quantization does not waste bandwidth; the paper
 samples throughput at 1 s, ≫ our default 1 ms tick.
@@ -23,7 +34,6 @@ samples throughput at 1 s, ≫ our default 1 ms tick.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -33,9 +43,38 @@ import numpy as np
 from . import baselines
 from .global_sync import sync_segments
 from .job_table import JobTable, make_table
-from .params import LEGACY_FLAT_KNOBS, SchedulerParams
+from .params import SchedulerParams, stack_params
 from .policy import Policy
 from .scheduler import TickView, get_scheduler
+
+#: One entry is appended each time an engine scan is traced for XLA.
+#: ``run``/``run_batch`` build a fresh jit per call, so every entry
+#: corresponds to exactly one XLA compile; the sweep tests assert a whole
+#: parameter grid lands in a single entry.  Entries are ``"<scheduler>"``
+#: tags; clear the list before the region you want to count.
+TRACE_LOG: list = []
+
+#: int32-safe tick horizon: the default ``end_s = 1e9`` ("forever") is 1e12
+#: ticks at dt=1 ms, which overflows the i32 workload arrays (an
+#: ``OverflowError`` on numpy>=2, a silent negative wrap — job never live —
+#: before).  Ticks clamp here instead; ~24 days of 1 ms ticks, far past any
+#: simulated horizon.
+I32_TICK_HORIZON = np.iinfo(np.int32).max
+
+
+def normalize_seed(seed):
+    """One seed normalization for every PRNG path: uint32, two's complement
+    for negatives, truncation for > 2**32.  ``run`` (Python int seed) and
+    ``run_batch`` (traced seed lanes) both route through this, so any seed
+    value produces bit-identical streams on both paths."""
+    if isinstance(seed, (int, np.integer)):
+        return np.uint32(int(seed) & 0xFFFFFFFF)
+    return jnp.asarray(seed).astype(jnp.uint32)
+
+
+def prng_key(seed) -> jax.Array:
+    """``PRNGKey`` over the normalized seed (see :func:`normalize_seed`)."""
+    return jax.random.PRNGKey(normalize_seed(seed))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,8 +84,9 @@ class EngineConfig:
     Scheduler knobs live in the scheduler's own schema
     (:mod:`repro.core.params`): pass a frozen params instance via
     ``scheduler_params`` or leave it ``None`` for the schema defaults.  The
-    flat per-scheduler fields of earlier releases survive below as a
-    deprecation shim only.
+    flat per-scheduler knobs of earlier releases (``gift_*``, ``tbf_*``,
+    ``adaptbf_*``, ``plan_*``) were removed after their deprecation cycle;
+    passing one is now a ``TypeError`` at construction.
     """
 
     n_servers: int = 2
@@ -64,41 +104,12 @@ class EngineConfig:
     sync_ticks: int = 500        # λ in ticks; 0 disables sync (local-only view)
     sinkhorn_iters: int = 32
     # The scheduler's own knobs (repro.core.params schema matching
-    # ``scheduler``); None -> resolved from the legacy shim / schema defaults.
+    # ``scheduler``); None -> schema defaults.
     scheduler_params: Optional[SchedulerParams] = None
     # Fabric model for multi-server scaling (calibrated to paper Fig. 7:
     # efficiency ~ S^-0.08 => 82% at 8 servers, 68% at 128).
     fabric_exponent: float = 0.0
     seed: int = 0
-    # ------------------------------------------------------------------
-    # DEPRECATION SHIM — legacy flat scheduler knobs (remove next release).
-    # None means "not set"; setting any of them warns and routes the value
-    # through SchedulerParams.from_engine_config, reproducing the historical
-    # behavior bit-identically.  New code: use ``scheduler_params``.
-    # ------------------------------------------------------------------
-    gift_mu_ticks: Optional[int] = None          # -> <Interval>Params.mu_ticks
-    gift_coupon_frac: Optional[float] = None     # -> GiftParams.coupon_frac
-    gift_ctrl_overhead_s: Optional[float] = None  # -> GiftParams.ctrl_overhead_s
-    tbf_rate: Optional[float] = None             # -> TbfParams/AdaptbfParams.rate
-    tbf_burst_s: Optional[float] = None          # -> TbfParams.burst_s
-    tbf_headroom: Optional[float] = None         # -> TbfParams.headroom
-    tbf_ctrl_overhead_s: Optional[float] = None  # -> TbfParams.ctrl_overhead_s
-    adaptbf_burst_s: Optional[float] = None      # -> AdaptbfParams.burst_s
-    adaptbf_repay: Optional[float] = None        # -> AdaptbfParams.repay
-    adaptbf_ctrl_overhead_s: Optional[float] = None  # -> AdaptbfParams.ctrl_overhead_s
-    plan_ema_alpha: Optional[float] = None       # -> PlanParams.ema_alpha
-    plan_ctrl_overhead_s: Optional[float] = None  # -> PlanParams.ctrl_overhead_s
-
-    def __post_init__(self):
-        legacy_set = [k for k in LEGACY_FLAT_KNOBS
-                      if getattr(self, k) is not None]
-        if legacy_set:
-            warnings.warn(
-                f"flat EngineConfig scheduler knobs {legacy_set} are "
-                "deprecated and will be removed in the next release; pass a "
-                "repro.core.params schema via EngineConfig(scheduler_params"
-                "=...) or use repro.api.Experiment",
-                DeprecationWarning, stacklevel=3)
 
     @property
     def worker_bw(self) -> float:
@@ -136,6 +147,11 @@ class EngineState(NamedTuple):
     dropped: jnp.ndarray      # i32[] arrivals rejected by full rings
 
 
+def _ticks_i32(seconds: float, dt: float) -> int:
+    """Seconds -> ticks, clamped to the int32-safe horizon."""
+    return int(min(round(seconds / dt), I32_TICK_HORIZON))
+
+
 def make_workload(
     cfg: EngineConfig,
     jobs: Sequence[dict],
@@ -154,8 +170,8 @@ def make_workload(
     think = np.zeros((j_,), np.int32)
     over = np.zeros((j_,), np.float32)
     for j, spec in enumerate(jobs):
-        start[j] = int(round(spec.get("start_s", 0.0) / cfg.dt))
-        end[j] = int(round(spec.get("end_s", 1e9) / cfg.dt))
+        start[j] = _ticks_i32(spec.get("start_s", 0.0), cfg.dt)
+        end[j] = _ticks_i32(spec.get("end_s", 1e9), cfg.dt)
         servers = spec.get("servers", list(range(s_)))
         total_procs = int(spec.get("procs", spec.get("size", 1) * 56))
         share = np.zeros((s_,), np.int64)
@@ -163,7 +179,7 @@ def make_workload(
             share[sv] += total_procs // len(servers) + (1 if i < total_procs % len(servers) else 0)
         procs[:, j] = share
         req[j] = float(spec.get("req_mb", 10.0)) * 1e6
-        think[j] = int(round(spec.get("think_s", 0.0) / cfg.dt))
+        think[j] = _ticks_i32(spec.get("think_s", 0.0), cfg.dt)
         over[j] = float(spec.get("overhead_us", 0.0)) * 1e-6
         if share.max() > cfg.ring_cap:
             raise ValueError(f"job {j}: {share.max()} procs on one server > ring_cap {cfg.ring_cap}")
@@ -179,7 +195,7 @@ def init_state(cfg: EngineConfig, n_bins: int) -> EngineState:
     s_, j_, w_ = cfg.n_servers, cfg.max_jobs, cfg.n_workers
     return EngineState(
         t=jnp.zeros((), jnp.int32),
-        key=jax.random.PRNGKey(cfg.seed),
+        key=prng_key(cfg.seed),
         qcount=jnp.zeros((s_, j_), jnp.int32),
         head=jnp.zeros((s_, j_), jnp.int32),
         arr_time=jnp.zeros((s_, j_, cfg.ring_cap), jnp.float32),
@@ -222,14 +238,20 @@ def _push_arrivals(state: EngineState, arrivals: jnp.ndarray, t_sec) -> EngineSt
 
 
 def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
+    """Build the per-tick transition ``tick(p, state, _) -> (state, None)``.
+
+    ``p`` is the scheduler's resolved params pytree; its numeric leaves may
+    be tracers (jit arguments, vmap lanes), so everything downstream treats
+    them as arrays.  ``cfg`` remains a static closure of engine geometry.
+    """
     s_, j_, w_ = cfg.n_servers, cfg.max_jobs, cfg.n_workers
     cap, h_ = cfg.ring_cap, cfg.wheel
     worker_bw = cfg.worker_bw
     srv_idx = jnp.arange(s_, dtype=jnp.int32)
     sched = get_scheduler(cfg.scheduler)
-    ctrl = sched.ctrl_overhead_s(cfg)
 
-    def tick(state: EngineState, _):
+    def tick(p, state: EngineState, _):
+        ctrl = sched.ctrl_overhead_s(p)
         t = state.t
         t_sec = t.astype(jnp.float32) * cfg.dt
         live = (t >= wl.start_tick) & (t < wl.end_tick)
@@ -242,7 +264,7 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
         state = _push_arrivals(state, arrivals, t_sec)
 
         # -- 2. scheduler bookkeeping --------------------------------------
-        aux = sched.pre_tick(cfg, state.aux, state.qcount, t)
+        aux = sched.pre_tick(cfg, p, state.aux, state.qcount, t)
         shares = sched.tick_shares(cfg, table, TickView(
             qcount=state.qcount, known=state.known, seg=state.seg,
             synced=state.synced, live=live))
@@ -263,7 +285,7 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
                 demand,
                 jnp.take_along_axis(arr_time, (head % cap)[..., None], axis=-1)[..., 0],
                 jnp.inf)
-            j_sel = sched.select(cfg, shares, head_time, demand, aux,
+            j_sel = sched.select(cfg, p, shares, head_time, demand, aux,
                                  wl.req_bytes, kw)
             valid = free & (j_sel >= 0)
             j_safe = jnp.maximum(j_sel, 0)
@@ -285,7 +307,7 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
             add_b = jnp.where(valid, rb, 0.0)
             bytes_job = bytes_job.at[j_safe].add(add_b)
             pops_job = pops_job.at[j_safe].add(valid.astype(jnp.int32))
-            aux = sched.charge(cfg, aux, srv_idx, j_safe, add_b)
+            aux = sched.charge(cfg, p, aux, srv_idx, j_safe, add_b)
             idle_ticks = idle_ticks + (free & ~valid & demand.any(axis=1)).sum().astype(jnp.int32)
             return (qcount, head, arr_time, wheel, free_at, aux, bytes_job,
                     pops_job, idle_ticks), None
@@ -328,13 +350,16 @@ def run(cfg: EngineConfig, wl: Workload, table: JobTable, sim_seconds: float):
     n_bins = max(1, (ticks + cfg.bin_ticks - 1) // cfg.bin_ticks)
     tick = make_tick(cfg, wl, table, n_bins)
     state = init_state(cfg, n_bins)
+    params = get_scheduler(cfg.scheduler).params(cfg)
 
     @jax.jit
-    def _run(state):
-        state, _ = jax.lax.scan(tick, state, None, length=ticks)
+    def _run(p, state):
+        TRACE_LOG.append(cfg.scheduler)
+        state, _ = jax.lax.scan(lambda s, x: tick(p, s, x), state, None,
+                                length=ticks)
         return state
 
-    state = _run(state)
+    state = _run(params, state)
     bin_s = cfg.bin_ticks * cfg.dt
     return {
         "state": state,
@@ -349,40 +374,71 @@ def run(cfg: EngineConfig, wl: Workload, table: JobTable, sim_seconds: float):
 
 
 def run_batch(cfg: EngineConfig, wl: Workload, table: JobTable,
-              sim_seconds: float, *, seeds: Sequence[int]):
-    """Run the simulation once per PRNG seed, vmapped — one compile for all.
+              sim_seconds: float, *, seeds: Sequence[int],
+              params_points: Optional[Sequence[SchedulerParams]] = None):
+    """Run the simulation over PRNG seeds — and optionally a params grid —
+    in ONE compile.
 
-    Every seed shares the workload, table, and config; only the PRNG stream
-    differs, so the whole batch is ``vmap`` over the initial key and each lane
-    is bit-identical to a sequential :func:`run` with ``cfg.seed = s``.  All
-    returned arrays carry a leading ``len(seeds)`` axis; use it to report
-    mean + coefficient-of-variation (the paper's variance-at-scale claims)
-    from a single compile.
+    Every seed (and grid point) shares the workload, table, and engine
+    geometry; only the PRNG stream and the scheduler's numeric knobs differ,
+    so the whole batch is ``vmap`` over the initial key (and the params
+    leaves) and each lane is bit-identical to a sequential :func:`run` with
+    ``cfg.seed = s`` (and ``cfg.scheduler_params = p``).
+
+    Without ``params_points`` every returned array carries a leading
+    ``K = len(seeds)`` axis.  With ``params_points`` (a sequence of concrete
+    params instances for ``cfg.scheduler`` — same schema, same ``mu_ticks``)
+    arrays carry ``[P, K, ...]``: P grid points × K seeds, the paper-style
+    mean + coefficient-of-variation sweep from a single compile.
     """
-    seeds = list(seeds)
+    seeds = [int(normalize_seed(s)) for s in seeds]
     ticks = int(round(sim_seconds / cfg.dt))
     n_bins = max(1, (ticks + cfg.bin_ticks - 1) // cfg.bin_ticks)
     tick = make_tick(cfg, wl, table, n_bins)
     base = init_state(cfg, n_bins)
+    sched = get_scheduler(cfg.scheduler)
+    if params_points is None:
+        params = sched.params(cfg)
+    else:
+        points = list(params_points)
+        for p in points:
+            if type(p) is not sched.params_cls:
+                raise TypeError(
+                    f"params_points entries must be {sched.params_cls.__name__} "
+                    f"for scheduler {cfg.scheduler!r}, got {type(p).__name__}")
+        params = stack_params(points)
+    seed_arr = jnp.asarray(seeds, dtype=jnp.uint32)
 
     @jax.jit
-    def _run_all(seed_arr):
-        def one(seed):
-            st = base._replace(key=jax.random.PRNGKey(seed))
-            st, _ = jax.lax.scan(tick, st, None, length=ticks)
-            return st
-        return jax.vmap(one)(seed_arr)
+    def _run_all(p, seed_arr):
+        TRACE_LOG.append(cfg.scheduler)
 
-    state = _run_all(jnp.asarray(seeds, dtype=jnp.uint32))
+        def one_seed(pp, seed):
+            st = base._replace(key=prng_key(seed))
+            st, _ = jax.lax.scan(lambda s, x: tick(pp, s, x), st, None,
+                                 length=ticks)
+            return st
+
+        def per_seed(pp):
+            return jax.vmap(lambda s: one_seed(pp, s))(seed_arr)
+
+        if params_points is None:
+            return per_seed(p)
+        # The dummy index supplies the mapped-axis size even for schemas with
+        # no numeric leaves (themis/fifo), where ``p`` alone carries no axis.
+        return jax.vmap(lambda pp, _i: per_seed(pp),
+                        in_axes=(0, 0))(p, jnp.arange(len(points)))
+
+    state = _run_all(params, seed_arr)
     bin_s = cfg.bin_ticks * cfg.dt
     return {
         "state": state,
-        "seeds": np.asarray(seeds),
-        "gbps": np.asarray(state.bytes_bin) / bin_s / 1e9,   # [K, J, NB]
+        "seeds": np.asarray(seeds, dtype=np.uint32),
+        "gbps": np.asarray(state.bytes_bin) / bin_s / 1e9,   # [(P,) K, J, NB]
         "bin_s": bin_s,
-        "issued": np.asarray(state.issued),                  # [K, J]
-        "completed": np.asarray(state.completed),            # [K, J]
-        "dropped": np.asarray(state.dropped),                # [K]
-        "idle_worker_ticks": np.asarray(state.idle_worker_ticks),  # [K]
+        "issued": np.asarray(state.issued),                  # [(P,) K, J]
+        "completed": np.asarray(state.completed),            # [(P,) K, J]
+        "dropped": np.asarray(state.dropped),                # [(P,) K]
+        "idle_worker_ticks": np.asarray(state.idle_worker_ticks),  # [(P,) K]
         "ticks": ticks,
     }

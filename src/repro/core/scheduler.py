@@ -11,21 +11,25 @@ inside either plane of the reproduction:
 The interface is four array-level hooks plus two bookkeeping knobs:
 
   ``init_aux(S, J)``            scheduler-private state (:class:`AuxState`)
-  ``pre_tick(cfg, aux, q, t)``  per-tick bookkeeping (refills, μ budgets)
+  ``pre_tick(cfg, p, aux, q, t)``  per-tick bookkeeping (refills, μ budgets)
   ``tick_shares(cfg, table, view)``  f32[S, J] selection shares for this tick
-  ``select(cfg, shares, head_time, demand, aux, req_bytes, key)`` → i32[S]
-  ``charge(cfg, aux, s, j, bytes)``  debit accounts after a pop
-  ``ctrl_overhead_s(cfg)``      fixed per-request control-path cost
+  ``select(cfg, p, shares, head_time, demand, aux, req_bytes, key)`` → i32[S]
+  ``charge(cfg, p, aux, s, j, bytes)``  debit accounts after a pop
+  ``ctrl_overhead_s(p)``        fixed per-request control-path cost
 
 All hooks take plain arrays (no engine state), so one implementation serves
 both planes.  Shapes: ``S`` servers, ``J`` job slots; every per-server hook
 operates row-wise, so a plane may pass a single-row slice.
 
-Each scheduler *owns its parameter schema* (``params_cls``, a frozen
-dataclass from :mod:`repro.core.params`): hooks call ``self.params(cfg)``,
-which resolves ``EngineConfig.scheduler_params`` (or the legacy flat-knob
-shim) into that schema.  The engine config itself carries no
-scheduler-specific fields.
+Each scheduler *owns its parameter schema* (``params_cls``, a frozen pytree
+dataclass from :mod:`repro.core.params`).  The resolved params object ``p``
+is threaded through every hook as an explicit argument because its numeric
+leaves are **runtime data**: inside the jitted engine they are tracers (jit
+arguments or vmap lanes of a parameter sweep), so hooks must treat them as
+arrays, never ``float(...)``/``if`` on them.  Only structural fields
+(``mu_ticks``) are static — they set the scan's ``lax.cond`` cadence.
+``self.params(cfg)`` resolves ``EngineConfig.scheduler_params`` (or the
+schema defaults) into a concrete ``p`` outside the trace.
 
 Register a new scheduler with the decorator and it becomes addressable from
 ``EngineConfig(scheduler=...)``, ``BBCluster(scheduler=...)`` and
@@ -35,7 +39,8 @@ Register a new scheduler with the decorator and it becomes addressable from
 
     @register("my-sched")
     class MyScheduler(Scheduler):
-        def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+        def select(self, cfg, p, shares, head_time, demand, aux, req_bytes,
+                   key):
             ...  # return int32[S] job per server, -1 to idle
 """
 from __future__ import annotations
@@ -79,40 +84,41 @@ class Scheduler:
     # -- parameters ----------------------------------------------------------
     def params(self, cfg) -> params_.SchedulerParams:
         """Resolve this scheduler's schema from ``cfg`` (explicit
-        ``scheduler_params`` wins; else the legacy flat-knob shim)."""
+        ``scheduler_params`` wins; else the schema defaults).  Called outside
+        the trace; the result is what gets threaded through the hooks."""
         return self.params_cls.resolve(cfg)
 
-    def mu_ticks(self, cfg) -> int:
-        """μ-interval cadence in ticks; meaningful for ``has_intervals``
-        schedulers, a harmless default for the rest (their refill /
-        interval_update hooks are no-ops)."""
-        p = self.params(cfg)
+    def mu_ticks(self, p) -> int:
+        """μ-interval cadence in ticks — static (never traced); meaningful
+        for ``has_intervals`` schedulers, a harmless default for the rest
+        (their refill / interval_update hooks are no-ops)."""
         return getattr(p, "mu_ticks", params_.DEFAULT_MU_TICKS)
 
-    def mu_s(self, cfg) -> float:
+    def mu_s(self, p, dt: float) -> float:
         """μ-interval cadence in seconds (``mu_ticks`` × engine ``dt``)."""
-        return self.mu_ticks(cfg) * cfg.dt
+        return self.mu_ticks(p) * dt
 
     # -- state ---------------------------------------------------------------
     def init_aux(self, n_servers: int, max_jobs: int) -> AuxState:
         return baselines.init_aux(n_servers, max_jobs)
 
-    def ctrl_overhead_s(self, cfg) -> float:
-        """Fixed per-request control-path cost charged to service time."""
-        return getattr(self.params(cfg), "ctrl_overhead_s", 0.0)
+    def ctrl_overhead_s(self, p):
+        """Fixed per-request control-path cost charged to service time.
+        May be a traced scalar inside the engine."""
+        return getattr(p, "ctrl_overhead_s", 0.0)
 
     # -- per-tick bookkeeping ------------------------------------------------
-    def refill(self, cfg, aux: AuxState, dt_s: float) -> AuxState:
+    def refill(self, cfg, p, aux: AuxState, dt_s) -> AuxState:
         """Continuous accrual over ``dt_s`` seconds (token-bucket refills)."""
         return aux
 
-    def interval_update(self, cfg, aux: AuxState, qcount) -> AuxState:
+    def interval_update(self, cfg, p, aux: AuxState, qcount) -> AuxState:
         """One μ boundary: recompute interval budgets/quotas. Unconditional —
-        the engine fires it every ``mu_ticks(cfg)``; the functional plane
+        the engine fires it every ``mu_ticks(p)``; the functional plane
         fires it when its virtual clock passes a μ."""
         return aux
 
-    def pre_tick(self, cfg, aux: AuxState, qcount, t) -> AuxState:
+    def pre_tick(self, cfg, p, aux: AuxState, qcount, t) -> AuxState:
         """Engine path: accrue one tick, then a μ update on the boundary."""
         return aux
 
@@ -121,12 +127,13 @@ class Scheduler:
         """f32[S, J] shares driving ``select`` this tick (zeros if unused)."""
         return jnp.zeros_like(view.seg)
 
-    def select(self, cfg, shares, head_time, demand, aux: AuxState,
+    def select(self, cfg, p, shares, head_time, demand, aux: AuxState,
                req_bytes, key) -> jnp.ndarray:
         """Pick one job per server row; int32[S], -1 idles the worker."""
         raise NotImplementedError
 
-    def charge(self, cfg, aux: AuxState, srv_idx, j_sel, add_bytes) -> AuxState:
+    def charge(self, cfg, p, aux: AuxState, srv_idx, j_sel,
+               add_bytes) -> AuxState:
         """Debit the scheduler's accounts for a pop of ``add_bytes``."""
         return aux
 
@@ -138,11 +145,11 @@ class _IntervalScheduler(Scheduler):
     has_intervals = True
     params_cls = params_._IntervalParams
 
-    def pre_tick(self, cfg, aux: AuxState, qcount, t) -> AuxState:
-        aux = self.refill(cfg, aux, cfg.dt)
+    def pre_tick(self, cfg, p, aux: AuxState, qcount, t) -> AuxState:
+        aux = self.refill(cfg, p, aux, cfg.dt)
         return jax.lax.cond(
-            jnp.mod(t, self.mu_ticks(cfg)) == 0,
-            lambda a: self.interval_update(cfg, a, qcount),
+            jnp.mod(t, self.mu_ticks(p)) == 0,
+            lambda a: self.interval_update(cfg, p, a, qcount),
             lambda a: a, aux)
 
 
@@ -195,7 +202,7 @@ class ThemisScheduler(Scheduler):
         has_mass = shares_have_mass(base, demand)[:, None]
         return jnp.where(has_mass, base, local)
 
-    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+    def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         u = jax.random.uniform(key, (shares.shape[0],))
         return select_job(shares, demand, u)
 
@@ -206,7 +213,7 @@ class FifoScheduler(Scheduler):
 
     params_cls = params_.FifoParams
 
-    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+    def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         return baselines.fifo_select(head_time, demand)
 
 
@@ -217,15 +224,14 @@ class GiftScheduler(_IntervalScheduler):
 
     params_cls = params_.GiftParams
 
-    def interval_update(self, cfg, aux, qcount):
-        p = self.params(cfg)
+    def interval_update(self, cfg, p, aux, qcount):
         return baselines.gift_interval(
-            aux, qcount, self.mu_s(cfg), cfg.server_bw, p.coupon_frac)
+            aux, qcount, self.mu_s(p, cfg.dt), cfg.server_bw, p.coupon_frac)
 
-    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+    def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         return baselines.gift_select(aux, demand, key)
 
-    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+    def charge(self, cfg, p, aux, srv_idx, j_sel, add_bytes):
         return baselines.gift_charge(aux, srv_idx, j_sel, add_bytes)
 
 
@@ -236,20 +242,19 @@ class TbfScheduler(_IntervalScheduler):
 
     params_cls = params_.TbfParams
 
-    def refill(self, cfg, aux, dt_s):
-        p = self.params(cfg)
+    def refill(self, cfg, p, aux, dt_s):
         rate = p.rate_eff(cfg)
         return baselines.tbf_refill(aux, rate, dt_s, rate * p.burst_s)
 
-    def interval_update(self, cfg, aux, qcount):
-        p = self.params(cfg)
+    def interval_update(self, cfg, p, aux, qcount):
         return baselines.tbf_interval(
-            aux, self.mu_s(cfg), cfg.server_bw, p.rate_eff(cfg), p.headroom)
+            aux, self.mu_s(p, cfg.dt), cfg.server_bw, p.rate_eff(cfg),
+            p.headroom)
 
-    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+    def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         return baselines.tbf_select(aux, demand, req_bytes, key)
 
-    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+    def charge(self, cfg, p, aux, srv_idx, j_sel, add_bytes):
         return baselines.tbf_charge(aux, srv_idx, j_sel, add_bytes)
 
 
@@ -263,20 +268,18 @@ class AdaptbfScheduler(_IntervalScheduler):
 
     params_cls = params_.AdaptbfParams
 
-    def refill(self, cfg, aux, dt_s):
-        p = self.params(cfg)
+    def refill(self, cfg, p, aux, dt_s):
         rate = p.rate_eff(cfg)
         return baselines.adaptbf_refill(aux, rate, dt_s, rate * p.burst_s)
 
-    def interval_update(self, cfg, aux, qcount):
-        p = self.params(cfg)
+    def interval_update(self, cfg, p, aux, qcount):
         return baselines.adaptbf_interval(
-            aux, qcount, self.mu_s(cfg), cfg.server_bw, p.repay)
+            aux, qcount, self.mu_s(p, cfg.dt), cfg.server_bw, p.repay)
 
-    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+    def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         return baselines.adaptbf_select(aux, demand, req_bytes, key)
 
-    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+    def charge(self, cfg, p, aux, srv_idx, j_sel, add_bytes):
         return baselines.adaptbf_charge(aux, srv_idx, j_sel, add_bytes)
 
 
@@ -290,12 +293,11 @@ class PlanScheduler(_IntervalScheduler):
 
     params_cls = params_.PlanParams
 
-    def interval_update(self, cfg, aux, qcount):
-        return baselines.plan_interval(aux, qcount,
-                                       self.params(cfg).ema_alpha)
+    def interval_update(self, cfg, p, aux, qcount):
+        return baselines.plan_interval(aux, qcount, p.ema_alpha)
 
-    def select(self, cfg, shares, head_time, demand, aux, req_bytes, key):
+    def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         return baselines.plan_select(aux, head_time, demand)
 
-    def charge(self, cfg, aux, srv_idx, j_sel, add_bytes):
+    def charge(self, cfg, p, aux, srv_idx, j_sel, add_bytes):
         return baselines.plan_charge(aux, srv_idx, j_sel, add_bytes)

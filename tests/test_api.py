@@ -49,8 +49,14 @@ class TestBuilder:
         svc = exp.serve()
         assert svc.cluster.cfg.dt == 2e-4
         assert svc.cluster.cfg.sync_ticks == 100
+        # the service's lambda-sync cadence follows sync_ticks x dt, so both
+        # planes sync segments at the same virtual times
+        assert svc.cluster.lam_s == pytest.approx(100 * 2e-4)
+        assert exp.serve(lam_s=0.25).cluster.lam_s == 0.25
         sobj = exp.sched
-        assert sobj.mu_s(svc.cluster.cfg) == sobj.mu_s(exp.engine_config())
+        svc_cfg, eng_cfg = svc.cluster.cfg, exp.engine_config()
+        assert (sobj.mu_s(sobj.params(svc_cfg), svc_cfg.dt)
+                == sobj.mu_s(sobj.params(eng_cfg), eng_cfg.dt))
 
     def test_run_without_jobs_raises(self):
         with pytest.raises(ValueError, match="add_job"):
@@ -217,13 +223,11 @@ class TestEverySchedulerViaFacade:
             np.asarray(sobj.tick_shares(svc.cluster.cfg, table, view)))
 
     @pytest.mark.parametrize("sched", SCHEDULERS)
-    def test_no_flat_knobs_needed(self, sched):
-        """A facade run never touches the deprecation shim."""
-        import warnings
-        with warnings.catch_warnings():
-            warnings.simplefilter("error", DeprecationWarning)
-            cfg = two_job_exp(sched).engine_config()
+    def test_config_carries_no_scheduler_fields(self, sched):
+        """The flat per-scheduler knobs are gone for good: the facade's
+        config exposes scheduler state only through ``scheduler`` +
+        ``scheduler_params``."""
+        cfg = two_job_exp(sched).engine_config()
         assert isinstance(cfg, EngineConfig)
-        assert all(getattr(cfg, k) is None
-                   for k in EngineConfig.__dataclass_fields__
-                   if k.startswith(("gift_", "tbf_", "adaptbf_", "plan_")))
+        assert not {k for k in EngineConfig.__dataclass_fields__
+                    if k.startswith(("gift_", "tbf_", "adaptbf_", "plan_"))}

@@ -1,34 +1,21 @@
-"""Scheduler-owned parameter schemas: registry coverage, validation, and the
-legacy flat-knob deprecation shim (PR-3 acceptance: legacy construction and
-explicit ``scheduler_params`` produce bit-identical ``run()`` traces)."""
+"""Scheduler-owned parameter schemas: registry coverage, validation, the
+pytree (traced-leaf) contract, and schema-default pins.
+
+The flat ``gift_*``/``tbf_*``/``adaptbf_*``/``plan_*`` ``EngineConfig`` knobs
+and their ``DeprecationWarning`` shim were deleted after their one-release
+overlap; the round-trip tests that used to pin the shim are now *default
+pins* — the calibrated values each schema must construct with, so a silent
+default drift fails here before it skews a benchmark comparison."""
 import dataclasses
 
+import jax
 import numpy as np
 import pytest
 
 from repro.core import (AdaptbfParams, EngineConfig, GiftParams, PlanParams,
                         SchedulerParams, TbfParams, available_schedulers,
-                        get_scheduler, make_workload, run)
-from repro.core.params import LEGACY_FLAT_KNOBS
-
-JOBS = [dict(user=0, size=1, procs=8, req_mb=10, end_s=1),
-        dict(user=1, size=1, procs=8, req_mb=10, end_s=1)]
-
-#: Deliberately non-default values per interval scheduler, exercising every
-#: legacy-mapped field.
-NON_DEFAULT = {
-    "gift": GiftParams(mu_ticks=200, coupon_frac=0.3, ctrl_overhead_s=1e-4),
-    "tbf": TbfParams(mu_ticks=300, rate=2e9, burst_s=0.5, headroom=0.6,
-                     ctrl_overhead_s=1e-4),
-    "adaptbf": AdaptbfParams(mu_ticks=250, rate=1e9, burst_s=0.7, repay=0.5,
-                             ctrl_overhead_s=2e-4),
-    "plan": PlanParams(mu_ticks=400, ema_alpha=0.5, ctrl_overhead_s=1e-4),
-}
-
-
-def _run(cfg):
-    wl, table = make_workload(cfg, JOBS)
-    return run(cfg, wl, table, 1.0)
+                        get_scheduler, stack_params)
+from repro.core.params import STATIC_FIELDS
 
 
 class TestRegistrySchemas:
@@ -52,16 +39,6 @@ class TestRegistrySchemas:
         assert p == sobj.params_cls()            # defaults all the way down
         assert isinstance(p.params_hash(), str) and len(p.params_hash()) == 12
 
-    @pytest.mark.parametrize("sched", available_schedulers())
-    def test_legacy_knob_names_exist_on_engine_config(self, sched):
-        """Every legacy mapping target must still be a (shim) config field."""
-        cls = get_scheduler(sched).params_cls
-        cfg = EngineConfig()
-        for field, legacy in cls.legacy_knobs.items():
-            assert legacy in LEGACY_FLAT_KNOBS
-            assert hasattr(cfg, legacy)
-            assert field in {f.name for f in dataclasses.fields(cls)}
-
     def test_params_type_mismatch_raises(self):
         cfg = EngineConfig(scheduler="gift", scheduler_params=TbfParams())
         with pytest.raises(TypeError, match="GiftParams"):
@@ -69,13 +46,69 @@ class TestRegistrySchemas:
 
     def test_adaptbf_schema_carries_no_inert_tbf_fields(self):
         """AdapTBF never reads PSSB headroom; the schema must not carry it,
-        or round trips and params hashes would drag an inert value along."""
+        or params hashes would drag an inert value along."""
         fields = {f.name for f in dataclasses.fields(AdaptbfParams)}
         assert "headroom" not in fields
         assert {"rate", "burst_s", "repay", "mu_ticks",
                 "ctrl_overhead_s"} <= fields
-        # every schema field round-trips through the legacy knobs
-        assert set(AdaptbfParams.legacy_knobs) == fields
+
+
+class TestFlatKnobsRemoved:
+    """The deprecation shim is gone: flat scheduler knobs on EngineConfig are
+    a construction-time TypeError, not a warning."""
+
+    @pytest.mark.parametrize("knob", [
+        "gift_mu_ticks", "gift_coupon_frac", "gift_ctrl_overhead_s",
+        "tbf_rate", "tbf_burst_s", "tbf_headroom", "tbf_ctrl_overhead_s",
+        "adaptbf_burst_s", "adaptbf_repay", "adaptbf_ctrl_overhead_s",
+        "plan_ema_alpha", "plan_ctrl_overhead_s",
+    ])
+    def test_flat_knob_is_rejected(self, knob):
+        with pytest.raises(TypeError):
+            EngineConfig(**{knob: 0.5})
+
+    def test_no_flat_knob_fields_survive(self):
+        names = set(EngineConfig.__dataclass_fields__)
+        assert not {n for n in names
+                    if n.startswith(("gift_", "tbf_", "adaptbf_", "plan_"))}
+
+    def test_construction_never_warns(self):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            EngineConfig(scheduler="tbf", scheduler_params=TbfParams())
+            EngineConfig(scheduler="themis")
+
+
+class TestSchemaDefaultPins:
+    """The calibrated defaults the benchmarks (and the calibrate.py
+    operating-point check) are pinned to.  Changing one on purpose means
+    re-running ``benchmarks/calibrate.py`` and updating these pins."""
+
+    def test_gift_defaults(self):
+        assert GiftParams() == GiftParams(
+            mu_ticks=500, coupon_frac=0.5, ctrl_overhead_s=5e-4)
+
+    def test_tbf_defaults(self):
+        assert TbfParams() == TbfParams(
+            mu_ticks=500, rate=0.0, burst_s=0.25, headroom=0.8,
+            ctrl_overhead_s=5.5e-4)
+
+    def test_adaptbf_defaults(self):
+        """benchmarks/calibrate.py operating point (12 s × 4 seeds)."""
+        assert AdaptbfParams() == AdaptbfParams(
+            mu_ticks=500, rate=0.0, burst_s=2.0, repay=0.1,
+            ctrl_overhead_s=1e-4)
+
+    def test_plan_defaults(self):
+        """benchmarks/calibrate.py operating point (12 s × 4 seeds)."""
+        assert PlanParams() == PlanParams(
+            mu_ticks=500, ema_alpha=0.2, ctrl_overhead_s=2e-4)
+
+    def test_hash_distinguishes_schemas_and_values(self):
+        assert TbfParams().params_hash() != AdaptbfParams().params_hash()
+        assert (AdaptbfParams(repay=0.5).params_hash()
+                != AdaptbfParams().params_hash())
 
 
 class TestValidation:
@@ -94,37 +127,45 @@ class TestValidation:
             TbfParams(rate=-1.0)
 
 
-class TestLegacyShim:
-    def test_flat_knob_construction_warns(self):
-        with pytest.warns(DeprecationWarning, match="tbf_burst_s"):
-            EngineConfig(scheduler="tbf", tbf_burst_s=0.5)
+class TestPytreeContract:
+    """The tentpole invariant: numeric knobs are traced leaves, structural
+    knobs are static metadata, and concrete grids stack into one batch."""
 
-    def test_clean_construction_does_not_warn(self):
-        import warnings
-        with warnings.catch_warnings():
-            warnings.simplefilter("error")
-            EngineConfig(scheduler="tbf", scheduler_params=TbfParams())
-            EngineConfig(scheduler="themis")
+    @pytest.mark.parametrize("sched", available_schedulers())
+    def test_numeric_fields_are_leaves_static_are_meta(self, sched):
+        cls = get_scheduler(sched).params_cls
+        p = cls()
+        leaves = jax.tree_util.tree_leaves(p)
+        assert len(leaves) == len(cls.numeric_fields())
+        for name in STATIC_FIELDS & set(f.name for f in dataclasses.fields(cls)):
+            # static fields survive tree_map untouched (metadata, not leaves);
+            # halving keeps every numeric knob inside its validated range
+            mapped = jax.tree_util.tree_map(lambda x: x * 0.5, p)
+            assert getattr(mapped, name) == getattr(p, name)
 
-    @pytest.mark.parametrize("sched", sorted(NON_DEFAULT))
-    def test_round_trip_flat_knobs_match_schema(self, sched):
-        """``Params -> to_legacy_knobs -> from_engine_config`` is lossless."""
-        p = NON_DEFAULT[sched]
-        with pytest.warns(DeprecationWarning):
-            cfg = EngineConfig(scheduler=sched, **p.to_legacy_knobs())
-        assert get_scheduler(sched).params(cfg) == p
+    def test_tree_roundtrip_preserves_equality(self):
+        p = AdaptbfParams(burst_s=0.5, repay=0.75)
+        leaves, treedef = jax.tree_util.tree_flatten(p)
+        assert jax.tree_util.tree_unflatten(treedef, leaves) == p
 
-    @pytest.mark.parametrize("sched", sorted(NON_DEFAULT))
-    def test_legacy_and_params_traces_bit_identical(self, sched):
-        """The acceptance bar: same values through the flat knobs and through
-        ``scheduler_params`` produce bit-identical run() traces."""
-        p = NON_DEFAULT[sched]
-        base = dict(n_servers=1, max_jobs=8, n_workers=4, scheduler=sched)
-        with pytest.warns(DeprecationWarning):
-            cfg_old = EngineConfig(**base, **p.to_legacy_knobs())
-        cfg_new = EngineConfig(**base, scheduler_params=p)
-        r_old, r_new = _run(cfg_old), _run(cfg_new)
-        for key in ("gbps", "issued", "completed"):
-            np.testing.assert_array_equal(r_old[key], r_new[key])
-        assert r_old["dropped"] == r_new["dropped"]
-        assert r_old["idle_worker_ticks"] == r_new["idle_worker_ticks"]
+    def test_stack_params_batches_leaves(self):
+        s = stack_params([AdaptbfParams(burst_s=0.5),
+                          AdaptbfParams(burst_s=2.0)])
+        np.testing.assert_allclose(np.asarray(s.burst_s), [0.5, 2.0])
+        assert s.mu_ticks == 500                  # metadata, unbatched
+
+    def test_stack_params_refuses_mixed_mu(self):
+        with pytest.raises(ValueError, match="mu_ticks"):
+            stack_params([GiftParams(mu_ticks=100), GiftParams(mu_ticks=200)])
+
+    def test_stack_params_refuses_mixed_schemas(self):
+        with pytest.raises(TypeError, match="one schema"):
+            stack_params([TbfParams(), AdaptbfParams()])
+
+    def test_traced_values_skip_validation(self):
+        """vmap/jit plumbing reconstructs schemas with tracers (and object()
+        sentinels); __post_init__ must not choke on them."""
+        s = stack_params([AdaptbfParams(repay=0.1), AdaptbfParams(repay=0.9)])
+        out = jax.vmap(lambda p, i: p.repay + i, in_axes=(0, 0))(
+            s, np.arange(2, dtype=np.float32))
+        np.testing.assert_allclose(np.asarray(out), [0.1, 1.9], atol=1e-6)

@@ -1,0 +1,157 @@
+"""One-compile parameter sweeps: the traced-params acceptance bar.
+
+Two invariants pin the tentpole:
+
+  * **compile count** — a P-point × K-seed ``Experiment.sweep`` traces (and
+    therefore compiles) the engine exactly once; the numeric knobs are vmap
+    lanes of a single executable, not re-trace triggers.
+  * **bit-identity** — every ``(point, seed)`` lane equals a sequential
+    ``run`` with that point's params and that seed, the traced-params
+    analogue of the existing seed-lane equivalence tests.
+
+CI runs this file inside the scheduler matrix too (``REPRO_SCHEDULER``
+focuses the per-scheduler grid test, like the rest of the lattice).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.core import (AdaptbfParams, GiftParams, PlanParams, TbfParams,
+                        available_schedulers, get_scheduler)
+from repro.core import engine
+
+_FOCUS = os.environ.get("REPRO_SCHEDULER")
+SCHEDULERS = (_FOCUS,) if _FOCUS else available_schedulers()
+
+JOBS = [dict(user=0, size=1, procs=6, req_mb=10, end_s=0.4),
+        dict(user=1, size=1, procs=6, req_mb=10, end_s=0.4)]
+
+#: Three deliberately spread points per tunable scheduler; the no-knob
+#: schedulers sweep a degenerate grid of defaults (the vmap axis still
+#: exists — supplied by the grid index — so the machinery is exercised).
+def three_point_grid(sched: str):
+    cls = get_scheduler(sched).params_cls
+    return {
+        "gift": [GiftParams(coupon_frac=c) for c in (0.2, 0.5, 0.8)],
+        "tbf": [TbfParams(burst_s=b) for b in (0.1, 0.25, 0.5)],
+        "adaptbf": [AdaptbfParams(repay=r) for r in (0.1, 0.25, 0.6)],
+        "plan": [PlanParams(ema_alpha=a) for a in (0.1, 0.3, 0.8)],
+    }.get(sched, [cls() for _ in range(3)])
+
+
+def make_exp(sched, params=None, seed=0):
+    return (Experiment(policy="job-fair", scheduler=sched, n_workers=2,
+                       params=params, seed=seed)
+            .add_jobs(JOBS))
+
+
+class TestCompileOnce:
+    def test_eight_points_four_seeds_one_trace(self):
+        """Acceptance: ≥8 param points × 4 seeds, exactly one engine trace
+        (== one XLA compile; run/run_batch build a fresh jit per call)."""
+        grid = [AdaptbfParams(burst_s=b, repay=r)
+                for b in (0.25, 0.5, 1.0, 2.0) for r in (0.1, 0.5)]
+        engine.TRACE_LOG.clear()
+        sw = make_exp("adaptbf").sweep(grid, 0.4, seeds=range(4))
+        assert len(engine.TRACE_LOG) == 1, engine.TRACE_LOG
+        assert sw.gbps.shape[:2] == (8, 4)
+        assert sw.n_points == 8 and sw.n_seeds == 4
+
+    def test_sequential_runs_pay_one_trace_each(self):
+        """The contrast that makes the sweep worth having."""
+        engine.TRACE_LOG.clear()
+        for r in (0.1, 0.5):
+            make_exp("adaptbf", params=AdaptbfParams(repay=r)).run(0.2)
+        assert len(engine.TRACE_LOG) == 2
+
+
+class TestEverySchedulerSweepBitIdentity:
+    """Satellite acceptance: for every registered scheduler, each point of a
+    3-point grid is bit-identical to a sequential run with that point's
+    params."""
+
+    @pytest.mark.parametrize("sched", SCHEDULERS)
+    def test_three_point_grid_matches_sequential_runs(self, sched):
+        grid = three_point_grid(sched)
+        seed = 7
+        sw = make_exp(sched, seed=seed).sweep(grid, 0.4, seeds=[seed])
+        assert sw.gbps.shape[0] == 3
+        for i, p in enumerate(grid):
+            res = make_exp(sched, params=p, seed=seed).run(0.4)
+            np.testing.assert_array_equal(sw.gbps[i, 0], res.gbps)
+            np.testing.assert_array_equal(sw.completed[i, 0], res.completed)
+            np.testing.assert_array_equal(sw.issued[i, 0], res.issued)
+            assert int(sw.dropped[i, 0]) == res.dropped
+            assert int(sw.idle_worker_ticks[i, 0]) == res.idle_worker_ticks
+
+
+@pytest.mark.slow
+class TestFullGridBitIdentity:
+    def test_every_lane_of_8x4_matches_sequential(self):
+        """Acceptance, full strength: all 32 lanes of the 8-point × 4-seed
+        sweep equal their sequential runs."""
+        grid = [AdaptbfParams(burst_s=b, repay=r)
+                for b in (0.25, 0.5, 1.0, 2.0) for r in (0.1, 0.5)]
+        seeds = list(range(4))
+        sw = make_exp("adaptbf").sweep(grid, 0.4, seeds=seeds)
+        for i, p in enumerate(grid):
+            for k, s in enumerate(seeds):
+                res = make_exp("adaptbf", params=p, seed=s).run(0.4)
+                np.testing.assert_array_equal(sw.gbps[i, k], res.gbps)
+                np.testing.assert_array_equal(sw.completed[i, k],
+                                              res.completed)
+
+
+class TestSweepResultApi:
+    @pytest.fixture(scope="class")
+    def sw(self):
+        return make_exp("adaptbf").sweep(
+            {"burst_s": [0.5, 1.0], "repay": [0.1, 0.5]}, 0.4, seeds=[0, 1])
+
+    def test_dict_grid_cross_product(self, sw):
+        assert [(p.burst_s, p.repay) for p in sw.points] == [
+            (0.5, 0.1), (0.5, 0.5), (1.0, 0.1), (1.0, 0.5)]
+
+    def test_point_result_is_batch(self, sw):
+        b = sw.point_result(2)
+        assert b.params == sw.points[2]
+        assert b.n_seeds == 2
+        assert b.seed_result(0).mean_gbps() > 0
+
+    def test_reductions_have_point_axis(self, sw):
+        for m, c in (sw.jain_fairness(0.1, 0.3), sw.mean_gbps(None, 0.1, 0.3),
+                     sw.cov_gbps(0, 0.1, 0.3)):
+            assert m.shape == (4,) and c.shape == (4,)
+        assert np.isfinite(m).all()
+
+    def test_summary_rows_are_json_ready(self, sw):
+        import json
+        rows = sw.summary(0.1, 0.3)
+        assert len(rows) == 4
+        assert {"params_hash", "burst_s", "repay", "jain_mean",
+                "gbps_mean"} <= set(rows[0])
+        json.dumps(rows)
+
+    def test_argbest(self, sw):
+        i = sw.argbest(lambda r: r.jain_fairness(0.1, 0.3))
+        assert 0 <= i < 4
+
+    def test_wrong_schema_grid_rejected(self):
+        with pytest.raises(TypeError, match="AdaptbfParams"):
+            make_exp("adaptbf").sweep([TbfParams()], 0.2, seeds=[0])
+
+    def test_unknown_grid_field_rejected(self):
+        with pytest.raises(ValueError, match="not numeric fields"):
+            make_exp("adaptbf").sweep({"headroom": [0.5]}, 0.2, seeds=[0])
+
+    def test_mu_is_not_sweepable_inline(self):
+        with pytest.raises(ValueError, match="mu_ticks"):
+            make_exp("gift").sweep(
+                [GiftParams(mu_ticks=100), GiftParams(mu_ticks=200)],
+                0.2, seeds=[0])
+
+    def test_empty_grid_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            make_exp("gift").sweep([], 0.2, seeds=[0])

@@ -1,0 +1,187 @@
+"""benchmarks.trend: BENCH_*.json ingestion, params_hash keying, and the
+regression gate — on synthetic artifacts (no engine runs)."""
+import json
+
+import pytest
+
+from benchmarks import trend
+
+
+def artifact(value: float, *, phash="abc123def456", sched="themis",
+             seconds="5"):
+    return {
+        "sections": {
+            "fig12": {
+                "rows": [
+                    {"name": f"fig12_{sched}_sustained_gbps",
+                     "us_per_call": "100",
+                     "derived": f"{value:.2f}GB/s cov 3.0%"},
+                    {"name": f"fig12_{sched}_job2_std_mbps",
+                     "us_per_call": "100", "derived": "250"},
+                    {"name": "fig12_themis_vs_gift_pct",
+                     "us_per_call": "0", "derived": "+13.5% (paper ...)"},
+                ],
+                "runs": [
+                    {"scheduler": sched, "policy": "job-fair",
+                     "params_hash": phash, "dropped": 0,
+                     "idle_worker_ticks": 7, "seconds": 5.0},
+                ],
+            },
+        },
+        "env": {"BENCH_SECONDS": seconds, "BENCH_SEEDS": "2"},
+    }
+
+
+class TestExtraction:
+    def test_points_keyed_on_params_hash(self):
+        pts = trend.extract_points(artifact(22.0), "sha1")
+        gbps = [p for p in pts if p["name"].endswith("sustained_gbps")][0]
+        assert gbps["value"] == pytest.approx(22.0)
+        assert gbps["params_hash"] == "abc123def456"
+        assert gbps["scheduler"] == "themis"
+        assert gbps["env"] == "s=5/k=2"
+
+    def test_attribution_prefers_longest_scheduler_name(self):
+        doc = artifact(10.0)
+        doc["sections"]["fig12"]["rows"].append(
+            {"name": "fig12_adaptbf_sustained_gbps", "us_per_call": "1",
+             "derived": "9.0GB/s"})
+        doc["sections"]["fig12"]["runs"].append(
+            {"scheduler": "adaptbf", "params_hash": "fff", "dropped": 0,
+             "idle_worker_ticks": 0})
+        # a plain-tbf run must not steal adaptbf rows
+        doc["sections"]["fig12"]["runs"].append(
+            {"scheduler": "tbf", "params_hash": "eee", "dropped": 0,
+             "idle_worker_ticks": 0})
+        pts = trend.extract_points(doc, "x")
+        ad = [p for p in pts if p["name"] == "fig12_adaptbf_sustained_gbps"][0]
+        assert ad["params_hash"] == "fff"
+
+    def test_unparsable_rows_skipped(self):
+        doc = artifact(1.0)
+        doc["sections"]["fig12"]["rows"].append(
+            {"name": "fig12_note", "us_per_call": "0", "derived": "n/a"})
+        names = {p["name"] for p in trend.extract_points(doc, "x")}
+        assert "fig12_note" not in names
+
+
+class TestGate:
+    def two_commit_history(self, v1, v2, **kw):
+        h = trend.merge(trend.load_history(None),
+                        trend.extract_points(artifact(v1, **kw), "old"))
+        return trend.merge(h, trend.extract_points(artifact(v2, **kw), "new"))
+
+    def test_throughput_drop_beyond_gate_fails(self):
+        h = self.two_commit_history(22.0, 10.0)
+        failures = trend.gate(h, 30.0, "new")
+        assert len(failures) == 1 and "sustained_gbps" in failures[0]
+
+    def test_small_wobble_passes(self):
+        h = self.two_commit_history(22.0, 21.0)
+        assert trend.gate(h, 30.0, "new") == []
+
+    def test_throughput_gain_passes(self):
+        h = self.two_commit_history(10.0, 22.0)
+        assert trend.gate(h, 30.0, "new") == []
+
+    def test_params_change_starts_new_trend_line(self):
+        """A recalibration (new params_hash) must not gate against numbers
+        produced by the old configuration."""
+        h = trend.merge(trend.load_history(None),
+                        trend.extract_points(artifact(22.0, phash="aaa"), "old"))
+        h = trend.merge(h, trend.extract_points(artifact(10.0, phash="bbb"),
+                                                "new"))
+        assert trend.gate(h, 30.0, "new") == []
+
+    def test_env_shrink_isolates_series(self):
+        """CI smoke (BENCH_SECONDS=5) never gates against full-length runs."""
+        h = trend.merge(trend.load_history(None),
+                        trend.extract_points(artifact(44.0, seconds="full"),
+                                             "old"))
+        h = trend.merge(h, trend.extract_points(artifact(10.0, seconds="5"),
+                                                "new"))
+        assert trend.gate(h, 30.0, "new") == []
+
+    def test_comparison_rows_never_gate(self):
+        h = self.two_commit_history(22.0, 22.0)
+        # poison the _vs_ row: huge change, still no failure
+        for p in h["points"]:
+            if "_vs_" in p["name"] and p["label"] == "new":
+                p["value"] = -99.0
+        assert trend.gate(h, 30.0, "new") == []
+
+    def test_same_ingest_duplicates_collapse_and_still_gate(self):
+        """Listing the same artifact twice in one ingest must not let the
+        latest label use its own duplicate as the gate baseline."""
+        h = trend.merge(trend.load_history(None),
+                        trend.extract_points(artifact(22.0), "old"))
+        dup = (trend.extract_points(artifact(5.0), "new")
+               + trend.extract_points(artifact(5.0), "new"))
+        h = trend.merge(h, dup)
+        per_key = {}
+        for p in h["points"]:
+            per_key.setdefault(trend.point_key(p), []).append(p["label"])
+        assert all(labels.count("new") == 1 for labels in per_key.values())
+        failures = trend.gate(h, 30.0, "new")
+        assert len(failures) == 1 and "sustained_gbps" in failures[0]
+
+    def test_relabelled_rerun_gates_vs_previous_label(self):
+        """Re-ingesting the same label (a CI re-run) replaces its points and
+        still gates against the previous label, not itself."""
+        h = trend.merge(trend.load_history(None),
+                        trend.extract_points(artifact(22.0), "old"))
+        h = trend.merge(h, trend.extract_points(artifact(21.0), "new"))
+        h = trend.merge(h, trend.extract_points(artifact(5.0), "new"))
+        failures = trend.gate(h, 30.0, "new")
+        assert len(failures) == 1 and "22" in failures[0]
+
+    def test_lower_is_better_for_std_rows(self):
+        h = self.two_commit_history(22.0, 22.0)
+        for p in h["points"]:
+            if "std" in p["name"] and p["label"] == "new":
+                p["value"] = 900.0          # was 250 -> big rise = regression
+        failures = trend.gate(h, 30.0, "new")
+        assert len(failures) == 1 and "std" in failures[0]
+
+
+class TestCli:
+    def test_two_artifacts_emit_table_and_history(self, tmp_path, capsys):
+        a = tmp_path / "BENCH_a.json"
+        b = tmp_path / "BENCH_b.json"
+        a.write_text(json.dumps(artifact(22.0)))
+        doc_b = artifact(21.5, sched="gift", phash="0123456789ab")
+        b.write_text(json.dumps(doc_b))
+        hist = tmp_path / "BENCH_TREND.json"
+        rc = trend.main([str(a), str(b), "--history", str(hist),
+                         "--label", "sha-one"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "fig12/fig12_themis_sustained_gbps" in out
+        assert "abc123def456" in out          # table keyed on params_hash
+        saved = json.loads(hist.read_text())
+        assert {p["label"] for p in saved["points"]} == {"sha-one"}
+
+    def test_regression_across_two_ingests_fails_and_keeps_baseline(self, tmp_path):
+        hist = tmp_path / "BENCH_TREND.json"
+        a = tmp_path / "BENCH_a.json"
+        a.write_text(json.dumps(artifact(22.0)))
+        assert trend.main([str(a), "--history", str(hist),
+                           "--label", "one"]) == 0
+        a.write_text(json.dumps(artifact(5.0)))
+        assert trend.main([str(a), "--history", str(hist),
+                           "--label", "two"]) == 1
+        # the regressing ingest must NOT become the stored baseline: a
+        # sustained regression keeps failing on the next run too
+        saved = json.loads(hist.read_text())
+        assert {p["label"] for p in saved["points"]} == {"one"}
+        assert trend.main([str(a), "--history", str(hist),
+                           "--label", "three"]) == 1
+
+    def test_no_gate_flag(self, tmp_path):
+        hist = tmp_path / "BENCH_TREND.json"
+        a = tmp_path / "BENCH_a.json"
+        a.write_text(json.dumps(artifact(22.0)))
+        trend.main([str(a), "--history", str(hist), "--label", "one"])
+        a.write_text(json.dumps(artifact(5.0)))
+        assert trend.main([str(a), "--history", str(hist), "--label", "two",
+                           "--no-gate"]) == 0
