@@ -1,0 +1,85 @@
+"""Scenario benchmarks: the paper's *dynamic* claims as trend-gated rows.
+
+Two pinned scenarios, both phased workloads the flat job vocabulary could
+not express before the Scenario API:
+
+  * **opportunity-fairness reallocation** (§3, §5.3.1): a steady 1-node app
+    shares the buffer with a heavy burster that goes idle mid-run.  Rows pin
+    the app's throughput while the burster is active (themis vs FIFO — the
+    fairness floor) and during the idle window (the reallocated capacity).
+  * **fig13-style checkpoint interference** (§5.5): an application with an
+    ON/OFF checkpoint loop against a steady 1-node background job; rows pin
+    the app's checkpoint-window throughput under FIFO vs themis size-fair.
+
+``*_gbps`` rows feed the ``benchmarks/trend.py`` regression gate
+(higher-is-better); ``*_vs_*`` ratio rows are tracked but ungated.
+``BENCH_SECONDS`` shrinks the scenario for CI smoke.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import bench_seconds, simulate
+
+
+def _onoff_jobs(t: float) -> list[dict]:
+    """Steady app + heavy burster idle in the middle third of the run."""
+    return [
+        dict(user=0, size=1, procs=56, req_mb=10, end_s=t),
+        dict(user=1, size=1, procs=224, req_mb=10, phases=[
+            dict(start_s=0.0, end_s=t / 3),
+            dict(start_s=2 * t / 3, end_s=t)]),
+    ]
+
+
+def _ckpt_jobs(t: float) -> list[dict]:
+    """WRF-like 4-node app checkpointing 40% of each period + background."""
+    period = t / 6
+    app = dict(user=0, size=4, procs=64, req_mb=8, phases=[
+        dict(start_s=i * period, duration_s=0.4 * period) for i in range(6)])
+    bg = dict(user=9, size=1, procs=224, req_mb=10, end_s=t)
+    return [app, bg]
+
+
+def run_scen() -> list[tuple]:
+    t = bench_seconds(24.0)
+    rows = []
+
+    # -- opportunity fairness: idle cycles flow to the active job ----------
+    busy = (0.05 * t, t / 3)              # burster active, past warmup
+    idle = (t / 3 + 0.17 * t, 2 * t / 3)  # burster idle, backlog drained
+    t0 = time.time()
+    th, _ = simulate("themis", _onoff_jobs(t), t, policy="job-fair")
+    ff, _ = simulate("fifo", _onoff_jobs(t), t)
+    us = (time.time() - t0) * 1e6
+    a_busy_th = th.mean_gbps(0, *busy)
+    a_idle_th = th.mean_gbps(0, *idle)
+    a_busy_ff = ff.mean_gbps(0, *busy)
+    rows.append(("scen_oppfair_themis_busy_gbps", f"{us:.0f}",
+                 f"{a_busy_th:.2f}"))
+    rows.append(("scen_oppfair_themis_idle_gbps", f"{us:.0f}",
+                 f"{a_idle_th:.2f} (idle share reallocated)"))
+    rows.append(("scen_oppfair_fifo_busy_gbps", f"{us:.0f}",
+                 f"{a_busy_ff:.2f}"))
+    rows.append(("scen_oppfair_themis_vs_fifo", f"{us:.0f}",
+                 f"{a_busy_th / max(a_busy_ff, 1e-9):.2f}x while contended"))
+
+    # -- fig13-style checkpoint interference -------------------------------
+    period = t / 6
+    on_windows = [(i * period, i * period + 0.4 * period) for i in range(6)]
+    t0 = time.time()
+    ck_ff, _ = simulate("fifo", _ckpt_jobs(t), t)
+    ck_th, _ = simulate("themis", _ckpt_jobs(t), t, policy="size-fair")
+    us = (time.time() - t0) * 1e6
+
+    def on_mean(res):
+        vals = [res.mean_gbps(0, a, b) for a, b in on_windows]
+        return sum(vals) / len(vals)
+
+    app_ff, app_th = on_mean(ck_ff), on_mean(ck_th)
+    rows.append(("scen_ckpt_themis_gbps", f"{us:.0f}",
+                 f"{app_th:.2f} (app ckpt-window, size-fair)"))
+    rows.append(("scen_ckpt_fifo_gbps", f"{us:.0f}", f"{app_ff:.2f}"))
+    rows.append(("scen_ckpt_themis_vs_fifo", f"{us:.0f}",
+                 f"{app_th / max(app_ff, 1e-9):.2f}x"))
+    return rows

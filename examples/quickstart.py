@@ -21,10 +21,17 @@ def main():
     steps = int(os.environ.get("EXAMPLE_STEPS", "60"))
     cfg = get_config("h2o-danube-1.8b", reduced=True)
     # a 2-server burst buffer shared under size-fair policy; the facade
-    # stands up the cluster and a metadata-stamped client per declared job
-    svc = (Experiment(policy="size-fair", n_servers=2)
-           .add_job(user=0, size=4)
-           .serve())
+    # stands up the cluster and a metadata-stamped client per declared job.
+    # The training job is declared as what it is — a checkpoint burst loop —
+    # so the same spec pins as a scenario trace and can .run() on the
+    # discrete-event engine to predict this workload's I/O interference.
+    exp = (Experiment(policy="size-fair", n_servers=2)
+           .add_job(user=0, size=4, req_mb=8)
+           .bursts(period_s=5.0, duty=0.2, n=6))
+    scn = exp.scenario("quickstart-train")
+    print(f"serving scenario {scn.name!r}: "
+          f"{len(scn.phases(0))} checkpoint phases declared")
+    svc = exp.serve()
     client = svc.client(0)
 
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, batch_size=4,

@@ -1,14 +1,19 @@
 """Plane-agnostic experiment facade: one spec, both planes, structured results.
 
 :class:`Experiment` is the single public entry point for running a policy /
-scheduler combination.  Build the spec once::
+scheduler combination.  Build the spec once — jobs are *scenarios*: phased,
+optionally open-loop workloads, not just one closed loop::
 
     from repro.api import Experiment
 
     exp = (Experiment(policy="group-then-user-fair", scheduler="adaptbf")
-           .add_job(user=0, group=1, size=4, req_mb=8)
+           .add_job(user=0, group=1, size=4, req_mb=8)          # steady app
            .add_job(user=1, group=0, size=1, req_mb=10)
-           .arrivals(job=1, start_s=5.0, end_s=20.0))
+           .phase(job=1, start_s=5.0, duration_s=5.0)           # burst...
+           .phase(job=1, start_s=15.0, duration_s=5.0,          # ...then an
+                  arrival="interval", interval_s=1.0)           # open-loop
+           .add_job(user=2, size=1, req_mb=4)                   # ckpt loop
+           .bursts(period_s=4.0, duty=0.25, n=5))
 
 then execute the *same object* on either plane:
 
@@ -30,10 +35,18 @@ Parameter sweeps are first-class: because the params schemas are pytrees
 whose numeric knobs are traced leaves, ``exp.sweep(grid, seconds, seeds=...)``
 runs P grid points × K seeds through ONE engine compile and returns a
 :class:`SweepResult` with per-point Jain / CoV / slowdown reductions — the
-workhorse of ``benchmarks/calibrate.py``.
+workhorse of ``benchmarks/calibrate.py``.  Phases are plain workload data
+(``[J, P]`` arrays inside the one jitted scan), so phased scenarios sweep
+in one compile too.
+
+Scenarios round-trip as JSON traces: ``exp.scenario(name)`` captures the
+declared jobs as a :class:`repro.scenario.Scenario` (``to_json`` /
+``from_json`` / ``save`` / ``load``), and ``Experiment.from_scenario``
+rebuilds an identical spec — how benchmarks and tests pin named workloads.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import itertools
 from typing import Iterable, Mapping, Optional, Sequence
@@ -42,10 +55,12 @@ import numpy as np
 
 from repro.bb.service import BBClient, BBCluster, JobMeta
 from repro.core import metrics
-from repro.core.engine import EngineConfig, make_workload, run, run_batch
+from repro.core.engine import (EngineConfig, make_workload, normalize_phases,
+                               run, run_batch)
 from repro.core.params import SchedulerParams
 from repro.core.policy import Policy
 from repro.core.scheduler import get_scheduler
+from repro.scenario import Scenario
 
 _LEGACY_KEYS = ("gbps", "bin_s", "issued", "completed", "dropped",
                 "idle_worker_ticks", "ticks", "state", "seeds")
@@ -311,16 +326,95 @@ class ExperimentService:
     """The functional-plane side of an :class:`Experiment`: a live
     :class:`BBCluster` plus one metadata-stamped :class:`BBClient` per
     declared job (same user/group/size/priority the engine's job table
-    carries)."""
+    carries), holding the declared job specs so :meth:`replay` can drive
+    the same scenario the engine compiles."""
 
     cluster: BBCluster
     clients: list[BBClient]
+    jobs: list = dataclasses.field(default_factory=list)
 
     def client(self, job: int) -> BBClient:
         return self.clients[job]
 
     def drain(self):
         return self.cluster.drain()
+
+    def replay(self, seconds: float, *, round_s: float = 0.25,
+               reqs_per_round: int = 4,
+               byte_scale: float = 1e-4) -> "ReplayResult":
+        """Drive the declared scenario through the functional plane.
+
+        Walks scenario time in ``round_s`` rounds; every job with a phase
+        covering the round start submits ``reqs_per_round`` writes sized
+        by that phase's ``req_mb`` (scaled by ``byte_scale`` so replays
+        stay cheap — share proportions, the cross-plane observable, don't
+        depend on the absolute byte count), then the round drains through
+        the shared scheduler core.  Within a round, the *completion order*
+        across jobs with queued demand is the same scheduler decision the
+        engine's tick makes — what the cross-plane scenario tests pin."""
+        n_rounds = max(1, int(round(seconds / round_s)))
+        counts = np.zeros((len(self.jobs), n_rounds), np.int32)
+        order: list[list[int]] = []
+        phases = [normalize_phases(spec, f"job {j}")
+                  for j, spec in enumerate(self.jobs)]
+        slot_of = {c.job.job_id: j for j, c in enumerate(self.clients)}
+        for j, c in enumerate(self.clients):
+            c.open(f"/replay_{j}", "w")
+        self.cluster.drain()
+        for r in range(n_rounds):
+            t0 = r * round_s
+            for j, c in enumerate(self.clients):
+                ph = next((p for p in phases[j]
+                           if p["start_s"] <= t0 < p["end_s"]), None)
+                if ph is None:
+                    continue
+                nbytes = max(1, int(ph["req_mb"] * 1e6 * byte_scale))
+                c.write_burst(f"/replay_{j}", reqs_per_round, nbytes)
+            round_order = []
+            for req in self.cluster.drain():
+                if req.op == "write" and req.job.job_id in slot_of:
+                    j = slot_of[req.job.job_id]
+                    counts[j, r] += 1
+                    round_order.append(j)
+            order.append(round_order)
+        return ReplayResult(counts=counts, order=order, round_s=round_s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayResult:
+    """Outcome of :meth:`ExperimentService.replay`: per-round completion
+    counts and, per round, the job index of every completed write in
+    completion order (the drain serves everything queued, so shares live
+    in the *order*, not the counts)."""
+
+    counts: np.ndarray        # i32[n_jobs, n_rounds]
+    order: list               # per round: [job, job, ...] in completion order
+    round_s: float
+
+    @property
+    def n_rounds(self) -> int:
+        return self.counts.shape[1]
+
+    def rounds_between(self, t0: float, t1: float) -> range:
+        return range(int(round(t0 / self.round_s)),
+                     min(int(round(t1 / self.round_s)), self.n_rounds))
+
+    def window_share(self, job: int, t0: float, t1: float,
+                     k: Optional[int] = None) -> float:
+        """Job's mean share of the first ``k`` completions per round over
+        scenario-time window ``[t0, t1)`` (default ``k``: half the round's
+        completions — the span where every submitting job still has queued
+        demand, the engine-comparable regime).  Rounds with no completions
+        are skipped; NaN if the window has none."""
+        shares = []
+        for r in self.rounds_between(t0, t1):
+            seq = self.order[r]
+            if not seq:
+                continue
+            kk = k if k is not None else max(1, len(seq) // 2)
+            head = seq[:kk]
+            shares.append(sum(1 for j in head if j == job) / len(head))
+        return float(np.mean(shares)) if shares else float("nan")
 
 
 class Experiment:
@@ -362,10 +456,20 @@ class Experiment:
                 req_mb: float = 10.0, start_s: float = 0.0,
                 end_s: Optional[float] = None, think_s: float = 0.0,
                 servers: Optional[Sequence[int]] = None,
-                overhead_us: float = 0.0) -> "Experiment":
-        """Declare one closed-loop job (the engine's workload row and the
-        service's :class:`JobMeta` in one statement).  ``procs`` defaults to
-        ``size * 56`` client processes; ``end_s`` to "the whole run"."""
+                overhead_us: float = 0.0,
+                arrival: Optional[str] = None,
+                interval_s: Optional[float] = None,
+                rate_hz: Optional[float] = None,
+                phases: Optional[Sequence[dict]] = None) -> "Experiment":
+        """Declare one job (the engine's workload row and the service's
+        :class:`JobMeta` in one statement).  ``procs`` defaults to
+        ``size * 56`` client processes; ``end_s`` to "the whole run".
+
+        By default the job is one closed-loop window; ``arrival`` switches
+        it open-loop (``"interval"`` with ``interval_s``, ``"poisson"``
+        with ``rate_hz``), and ``phases`` (or later :meth:`phase` /
+        :meth:`bursts` / :meth:`ramp` calls) replaces the flat window with
+        an explicit phase scenario."""
         spec = dict(user=user, group=group, size=size, priority=priority,
                     req_mb=req_mb, start_s=start_s, think_s=think_s,
                     overhead_us=overhead_us)
@@ -375,34 +479,226 @@ class Experiment:
             spec["end_s"] = end_s
         if servers is not None:
             spec["servers"] = list(servers)
+        if arrival is not None:
+            spec["arrival"] = arrival
+        if interval_s is not None:
+            spec["interval_s"] = interval_s
+        if rate_hz is not None:
+            spec["rate_hz"] = rate_hz
+        if phases is not None:
+            spec["phases"] = [dict(ph) for ph in phases]
+        normalize_phases(spec, f"job {len(self.jobs)}")   # fail at declare time
         self.jobs.append(spec)
         return self
 
     def add_jobs(self, specs: Iterable[dict]) -> "Experiment":
         """Bulk form of :meth:`add_job` over raw workload spec dicts (the
         :func:`repro.core.make_workload` vocabulary) — the migration path for
-        existing benchmark job lists."""
+        existing benchmark job lists.  Unknown keys (``req_md``) raise
+        ``TypeError`` listing the accepted vocabulary, and malformed phase
+        windows / arrival modes raise ``ValueError`` — both here at declare
+        time rather than deep inside ``make_workload``."""
         for spec in specs:
-            self.jobs.append(dict(spec))
+            normalize_phases(spec, f"job {len(self.jobs)}")
+            # deep copy: nested phases/servers lists must not stay aliased
+            # to the caller's dicts (later .phase() calls would silently
+            # edit every Experiment built from the same spec list)
+            self.jobs.append(copy.deepcopy(dict(spec)))
+        return self
+
+    def _job_index(self, job: Optional[int], method: str) -> int:
+        """The job index ``method`` targets: ``job=i`` (range-checked at
+        call time) or the most recently declared job."""
+        if not self.jobs:
+            raise ValueError(f"{method}() needs at least one add_job() first")
+        if job is None:
+            return len(self.jobs) - 1
+        if not 0 <= job < len(self.jobs):
+            raise IndexError(
+                f"{method}(job={job}): experiment declares "
+                f"{len(self.jobs)} job(s) (valid: 0..{len(self.jobs) - 1})")
+        return job
+
+    def _add_phase(self, spec: dict, where: str, *, start_s: float,
+                   end_s: Optional[float], duration_s: Optional[float],
+                   **fields) -> None:
+        ph: dict = dict(start_s=start_s)
+        if duration_s is not None:
+            ph["duration_s"] = duration_s
+        if end_s is not None:
+            ph["end_s"] = end_s
+        ph.update({k: v for k, v in fields.items() if v is not None})
+        spec.setdefault("phases", []).append(ph)
+        try:
+            normalize_phases(spec, where)   # windows sorted, modes coherent
+        except Exception:
+            spec["phases"].pop()
+            if not spec["phases"]:
+                del spec["phases"]
+            raise
+
+    def phase(self, job: Optional[int] = None, *, start_s: float,
+              duration_s: Optional[float] = None,
+              end_s: Optional[float] = None,
+              req_mb: Optional[float] = None,
+              think_s: Optional[float] = None,
+              arrival: Optional[str] = None,
+              interval_s: Optional[float] = None,
+              rate_hz: Optional[float] = None) -> "Experiment":
+        """Append one phase to a job (default: the last declared one).
+
+        The first :meth:`phase` call replaces the job's flat
+        ``start_s..end_s`` window with the explicit phase list; omitted
+        fields inherit the job-level ``req_mb``/``think_s``/arrival
+        defaults.  Phases must be declared in start order and must not
+        overlap."""
+        j = self._job_index(job, "phase")
+        self._add_phase(self.jobs[j], f"job {j}",
+                        start_s=start_s, end_s=end_s, duration_s=duration_s,
+                        req_mb=req_mb, think_s=think_s, arrival=arrival,
+                        interval_s=interval_s, rate_hz=rate_hz)
+        return self
+
+    def bursts(self, job: Optional[int] = None, *, period_s: float,
+               duty: float, start_s: float = 0.0, n: Optional[int] = None,
+               end_s: Optional[float] = None,
+               req_mb: Optional[float] = None,
+               think_s: Optional[float] = None,
+               arrival: Optional[str] = None,
+               interval_s: Optional[float] = None,
+               rate_hz: Optional[float] = None) -> "Experiment":
+        """ON/OFF sugar (checkpoint/restart loops): every ``period_s``, an
+        ON window of ``duty * period_s`` seconds, repeated ``n`` times (or
+        until ``end_s``).  Each ON window is one :meth:`phase`; the gaps
+        are idle — the shape behind the paper's opportunity-fairness and
+        §5.5 bursty-application claims."""
+        if not 0.0 < duty <= 1.0:
+            raise ValueError(f"bursts(): duty must be in (0, 1], got {duty}")
+        if (n is None) == (end_s is None):
+            raise ValueError("bursts(): give exactly one of n= or end_s=")
+        if n is None:
+            # every burst whose ON window fits before end_s, including one
+            # that ends exactly there (floor((end-start)/period) would drop
+            # it and could even yield zero phases — leaving the job a flat
+            # full-run loop, the opposite of what was asked)
+            span = end_s - start_s - duty * period_s
+            n = int(span / period_s + 1e-9) + 1 if span >= -1e-9 else 0
+        if n < 1:
+            raise ValueError(
+                f"bursts(): window [{start_s}, {end_s}) is shorter than one "
+                f"{duty * period_s:g} s burst — no phases would be added")
+        j = self._job_index(job, "bursts")
+        for i in range(n):
+            self._add_phase(self.jobs[j], f"job {j}",
+                            start_s=start_s + i * period_s, end_s=None,
+                            duration_s=duty * period_s, req_mb=req_mb,
+                            think_s=think_s, arrival=arrival,
+                            interval_s=interval_s, rate_hz=rate_hz)
+        return self
+
+    def ramp(self, job: Optional[int] = None, *, start_s: float,
+             duration_s: float, steps: int = 4,
+             req_mb: Optional[Sequence[float]] = None,
+             think_s: Optional[Sequence[float]] = None,
+             arrival: Optional[str] = None,
+             interval_s: Optional[float] = None,
+             rate_hz: Optional[float] = None) -> "Experiment":
+        """Staircase sugar: ``steps`` back-to-back phases over
+        ``start_s..start_s+duration_s`` with ``req_mb`` and/or ``think_s``
+        interpolated linearly between ``(from, to)`` pairs — a load ramp
+        without hand-writing each step."""
+        if steps < 1:
+            raise ValueError(f"ramp(): steps must be >= 1, got {steps}")
+        if req_mb is None and think_s is None:
+            raise ValueError("ramp(): give req_mb=(from, to) and/or "
+                             "think_s=(from, to)")
+
+        def lerp(pair, i):
+            if pair is None:
+                return None
+            lo, hi = pair
+            frac = i / max(steps - 1, 1)
+            return float(lo) + (float(hi) - float(lo)) * frac
+
+        j = self._job_index(job, "ramp")
+        step_s = duration_s / steps
+        for i in range(steps):
+            self._add_phase(self.jobs[j], f"job {j}",
+                            start_s=start_s + i * step_s, end_s=None,
+                            duration_s=step_s, req_mb=lerp(req_mb, i),
+                            think_s=lerp(think_s, i), arrival=arrival,
+                            interval_s=interval_s, rate_hz=rate_hz)
         return self
 
     def arrivals(self, *, job: Optional[int] = None,
                  start_s: Optional[float] = None,
                  end_s: Optional[float] = None,
-                 think_s: Optional[float] = None) -> "Experiment":
-        """Adjust arrival timing — of one declared job (``job=i``) or of
-        every declared job — without re-stating the rest of its spec."""
+                 think_s: Optional[float] = None,
+                 arrival: Optional[str] = None,
+                 interval_s: Optional[float] = None,
+                 rate_hz: Optional[float] = None) -> "Experiment":
+        """Adjust arrival timing/mode — of one declared job (``job=i``,
+        range-checked here rather than failing late in ``make_workload``)
+        or of every declared job — without re-stating the rest of its
+        spec.  ``arrival``/``interval_s``/``rate_hz`` switch the flat
+        window open-loop (phased jobs set these per phase instead).
+
+        On a job with explicit phases, ``start_s``/``end_s`` would be
+        silently shadowed by the phase windows — that's rejected here;
+        edit the phases instead.  ``think_s``/``arrival`` fields remain
+        valid: they are the defaults phases inherit when they omit them."""
         if not self.jobs:
             raise ValueError("arrivals() needs at least one add_job() first")
-        targets = self.jobs if job is None else [self.jobs[job]]
-        for spec in targets:
-            if start_s is not None:
-                spec["start_s"] = start_s
-            if end_s is not None:
-                spec["end_s"] = end_s
-            if think_s is not None:
-                spec["think_s"] = think_s
+        if job is None:
+            targets = list(range(len(self.jobs)))
+        else:
+            targets = [self._job_index(job, "arrivals")]
+        updates = dict(start_s=start_s, end_s=end_s, think_s=think_s,
+                       arrival=arrival, interval_s=interval_s,
+                       rate_hz=rate_hz)
+        if start_s is not None or end_s is not None:
+            # checked before any spec is touched, so a mixed flat/phased
+            # batch fails atomically
+            for j in targets:
+                if self.jobs[j].get("phases"):
+                    raise ValueError(
+                        f"arrivals(job={j}): job has explicit phases, which "
+                        f"define its start/end windows; adjust the phases "
+                        f"(start_s/end_s here would be silently ignored)")
+        # snapshot every target before touching any, so a failure on job k
+        # rolls the whole batch back (not just job k)
+        before = {j: copy.deepcopy(self.jobs[j]) for j in targets}
+        try:
+            for j in targets:
+                spec = self.jobs[j]
+                spec.update({k: v for k, v in updates.items()
+                             if v is not None})
+                normalize_phases(spec, f"job {j}")
+        except Exception:
+            for j, saved in before.items():
+                self.jobs[j].clear()
+                self.jobs[j].update(saved)
+            raise
         return self
+
+    # -- scenarios (JSON-pinnable traces) ------------------------------------
+    def scenario(self, name: str = "") -> Scenario:
+        """Snapshot the declared jobs as a :class:`repro.scenario.Scenario`
+        (deep copy — later builder calls don't mutate it)."""
+        return Scenario(jobs=copy.deepcopy(self.jobs), name=name)
+
+    def to_json(self, name: str = "") -> str:
+        """The declared workload as a scenario JSON trace."""
+        return self.scenario(name).to_json()
+
+    @classmethod
+    def from_scenario(cls, scenario: Scenario | str, **kw) -> "Experiment":
+        """Build an Experiment running ``scenario`` (a :class:`Scenario` or
+        its JSON text); ``kw`` are the usual constructor arguments
+        (policy, scheduler, params, geometry)."""
+        if isinstance(scenario, str):
+            scenario = Scenario.from_json(scenario)
+        return cls(**kw).add_jobs(copy.deepcopy(scenario.jobs))
 
     # -- compilation ---------------------------------------------------------
     def _slots(self) -> int:
@@ -523,7 +819,7 @@ class Experiment:
             n_servers=self.n_servers, n_workers=self.n_workers,
             server_bw=self.server_bw, max_jobs=self._slots(),
             seed=self.seed, **self.engine_kw)
-        clone.jobs = [dict(self.jobs[job])]
+        clone.jobs = [copy.deepcopy(self.jobs[job])]
         return clone.run(seconds)
 
     def serve(self, *, autodrain: bool = True,
@@ -558,4 +854,5 @@ class Experiment:
                              priority=spec.get("priority", 1.0)),
                      autodrain=autodrain)
             for j, spec in enumerate(self.jobs)]
-        return ExperimentService(cluster=cluster, clients=clients)
+        return ExperimentService(cluster=cluster, clients=clients,
+                                 jobs=copy.deepcopy(self.jobs))

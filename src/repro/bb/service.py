@@ -384,6 +384,22 @@ class BBClient:
     def open(self, path: str, mode: str = "r") -> BBFile:
         return BBFile(self, path, mode)
 
+    def write_burst(self, path: str, n: int, nbytes: int, *,
+                    offset: int = 0) -> list[Request]:
+        """Queue ``n`` back-to-back writes of ``nbytes`` without draining —
+        one checkpoint-style burst.  The scenario replay path
+        (:meth:`repro.api.ExperimentService.replay`) uses this to put a
+        whole phase's demand in the queues before one drain round, so the
+        scheduler sees concurrent demand exactly as the engine's tick
+        does (``autodrain`` clients would serialize each request)."""
+        reqs = []
+        for i in range(n):
+            req = Request(job=self.job, op="write", path=path,
+                          offset=offset + i * nbytes, data=b"\0" * nbytes)
+            self.cluster.submit(req)
+            reqs.append(req)
+        return reqs
+
     def mkdir(self, path: str):
         self._req("mkdir", path)
 

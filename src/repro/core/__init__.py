@@ -9,6 +9,8 @@ from .tokens import opportunity_renorm, segments, select_job
 from .global_sync import sinkhorn_balance, sync_segments, local_segments, global_shares
 from .scheduler import (Scheduler, TickView, available_schedulers,
                         get_scheduler, register)
-from .engine import (EngineConfig, Workload, make_workload, normalize_seed,
-                     prng_key, run, run_batch)
+from .engine import (ARRIVAL_MODES, EngineConfig, JOB_SPEC_KEYS,
+                     PHASE_SPEC_KEYS, Workload, make_workload,
+                     normalize_phases, normalize_seed, prng_key, run,
+                     run_batch, validate_job_spec)
 from . import baselines, metrics

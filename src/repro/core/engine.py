@@ -1,11 +1,24 @@
 """Vectorized discrete-event burst-buffer engine (paper §5 testbed, in JAX).
 
 Models a remote-shared burst buffer: ``S`` servers, each with ``W`` workers
-sharing the server's bandwidth, serving closed-loop clients (the paper's
-benchmark: each process writes a fixed-size request, waits for completion,
-thinks, repeats).  All state lives in fixed-shape jnp arrays; one simulated
-tick is a pure function and the whole run is a single ``jax.lax.scan`` — the
-entire testbed jit-compiles.
+sharing the server's bandwidth, serving phased client populations.  All
+state lives in fixed-shape jnp arrays; one simulated tick is a pure function
+and the whole run is a single ``jax.lax.scan`` — the entire testbed
+jit-compiles.
+
+Workloads are **scenarios**: each job is a sequence of phases held in
+fixed-shape ``[J, P]`` arrays (start/end/request/think per phase, padded
+with inactive rows), and the tick step selects each job's current phase
+with a mask — so bursty checkpoint/restart loops, ramps, and idle windows
+(the patterns behind the paper's opportunity-fairness and §5.5 application
+claims) express without leaving the one-compile jit/vmap path.  A flat
+single-window spec lowers to ``P = 1`` and runs bit-identically to the
+pre-scenario engine.  Each phase arrives **closed-loop** (the paper's
+benchmark: write, wait, think, repeat), on a **fixed interval** (every
+``interval_s`` all client processes issue one request — a synchronized
+checkpoint burst), or **Poisson** (per-process rate ``rate_hz``, drawn from
+the run's PRNG seed) — the open-loop modes decouple arrival timing from
+completion.
 
 Scheduling is pluggable: ``EngineConfig.scheduler`` names an entry in the
 :mod:`repro.core.scheduler` registry (``available_schedulers()`` — ``themis``,
@@ -34,7 +47,7 @@ samples throughput at 1 s, ≫ our default 1 ms tick.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence
+from typing import Mapping, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -117,15 +130,167 @@ class EngineConfig:
         return self.server_bw / self.n_workers * eff
 
 
-class Workload(NamedTuple):
-    """Closed-loop client population (static over a run)."""
+#: Arrival modes a phase can run in (``Workload.arrival_mode`` codes).
+ARRIVAL_CLOSED, ARRIVAL_INTERVAL, ARRIVAL_POISSON = 0, 1, 2
+ARRIVAL_MODES = {"closed": ARRIVAL_CLOSED, "interval": ARRIVAL_INTERVAL,
+                 "poisson": ARRIVAL_POISSON}
 
-    start_tick: jnp.ndarray   # i32[J]
-    end_tick: jnp.ndarray     # i32[J]  stop issuing re-arrivals at/after this tick
-    procs: jnp.ndarray        # i32[S, J]  client processes of job j bound to server s
-    req_bytes: jnp.ndarray    # f32[J]
-    think_ticks: jnp.ndarray  # i32[J]  client compute time between requests
-    overhead_s: jnp.ndarray   # f32[J]  fixed per-request server cost (metadata ops)
+#: The job-spec vocabulary ``make_workload`` (and the Experiment builder /
+#: Scenario JSON) accept.  Anything else is a typo and raises ``TypeError``.
+JOB_SPEC_KEYS = frozenset({
+    "user", "group", "size", "priority", "procs", "req_mb", "start_s",
+    "end_s", "think_s", "servers", "overhead_us", "phases", "arrival",
+    "interval_s", "rate_hz"})
+
+#: Keys accepted inside one entry of a spec's ``phases`` list.
+PHASE_SPEC_KEYS = frozenset({
+    "start_s", "end_s", "duration_s", "req_mb", "think_s", "arrival",
+    "interval_s", "rate_hz"})
+
+
+def validate_job_spec(spec, where: str = "job spec") -> None:
+    """Reject unknown keys with the accepted vocabulary spelled out —
+    the same fail-loudly UX as ``Policy.parse`` on a misspelled policy
+    (``req_md`` must not silently fall back to the 10 MB default)."""
+    if not isinstance(spec, Mapping):
+        raise TypeError(f"{where}: expected a dict, got {type(spec).__name__}")
+    unknown = sorted(set(spec) - JOB_SPEC_KEYS)
+    if unknown:
+        raise TypeError(
+            f"{where}: unknown key(s) {unknown}. Accepted job keys: "
+            f"{sorted(JOB_SPEC_KEYS)}.")
+    for i, ph in enumerate(spec.get("phases") or ()):
+        if not isinstance(ph, Mapping):
+            raise TypeError(f"{where} phase {i}: expected a dict, got "
+                            f"{type(ph).__name__}")
+        bad = sorted(set(ph) - PHASE_SPEC_KEYS)
+        if bad:
+            raise TypeError(
+                f"{where} phase {i}: unknown key(s) {bad}. Accepted phase "
+                f"keys: {sorted(PHASE_SPEC_KEYS)}.")
+
+
+def normalize_phases(spec, where: str = "job spec") -> list[dict]:
+    """Resolve a job spec into its phase list (seconds-domain, defaults
+    applied, validated).
+
+    A flat spec (no ``phases``) is one phase spanning ``start_s..end_s``.
+    Explicit phases inherit the spec's ``req_mb``/``think_s``/arrival
+    fields as defaults, must each carry ``start_s`` plus ``end_s`` or
+    ``duration_s``, must be non-empty, and must not overlap (sorted by
+    start).  Arrival modes: ``closed`` (default), ``interval`` (needs
+    ``interval_s > 0``), ``poisson`` (needs ``rate_hz > 0``).
+    """
+    validate_job_spec(spec, where)
+    base = dict(
+        req_mb=float(spec.get("req_mb", 10.0)),
+        think_s=float(spec.get("think_s", 0.0)),
+        arrival=spec.get("arrival", "closed"),
+        interval_s=spec.get("interval_s"),
+        rate_hz=spec.get("rate_hz"))
+    raw = spec.get("phases")
+    if not raw:
+        raw = [dict(start_s=spec.get("start_s", 0.0),
+                    end_s=spec.get("end_s", 1e9))]
+        explicit = False
+    else:
+        explicit = True
+    out = []
+    for i, ph in enumerate(raw):
+        tag = f"{where} phase {i}"
+        if "start_s" not in ph:
+            raise ValueError(f"{tag}: needs start_s")
+        start = float(ph["start_s"])
+        if "end_s" in ph and "duration_s" in ph:
+            raise ValueError(f"{tag}: give end_s or duration_s, not both")
+        if "duration_s" in ph:
+            end = start + float(ph["duration_s"])
+        elif "end_s" in ph:
+            end = float(ph["end_s"])
+        else:
+            raise ValueError(f"{tag}: needs end_s or duration_s")
+        if explicit and end <= start:
+            raise ValueError(f"{tag}: empty window [{start}, {end})")
+        mode = ph.get("arrival", base["arrival"])
+        if mode not in ARRIVAL_MODES:
+            raise ValueError(
+                f"{tag}: unknown arrival mode {mode!r}; one of "
+                f"{sorted(ARRIVAL_MODES)}")
+        interval_s = ph.get("interval_s", base["interval_s"])
+        rate_hz = ph.get("rate_hz", base["rate_hz"])
+        if mode == "interval" and not (interval_s and float(interval_s) > 0):
+            raise ValueError(f"{tag}: arrival='interval' needs interval_s > 0")
+        if mode == "poisson" and not (rate_hz and float(rate_hz) > 0):
+            raise ValueError(f"{tag}: arrival='poisson' needs rate_hz > 0")
+        if out:
+            prev_end = out[-1]["end_s"]
+            # ulp tolerance: bursts()/ramp() accumulate starts and ends by
+            # different float paths, so a contiguous boundary can differ by
+            # rounding; only a *material* overlap is an error.
+            tol = 1e-9 * max(1.0, abs(prev_end))
+            if start < prev_end - tol:
+                raise ValueError(
+                    f"{tag}: starts at {start} inside the previous phase "
+                    f"(ends {prev_end}); phases must be sorted and "
+                    f"non-overlapping")
+            if start < prev_end:
+                start = prev_end          # snap ulp-gaps to exact contiguity
+        out.append(dict(
+            start_s=start, end_s=end,
+            req_mb=float(ph.get("req_mb", base["req_mb"])),
+            think_s=float(ph.get("think_s", base["think_s"])),
+            arrival=mode,
+            interval_s=float(interval_s) if interval_s else 0.0,
+            rate_hz=float(rate_hz) if rate_hz else 0.0))
+    return out
+
+
+class Workload(NamedTuple):
+    """Phased client population (static over a run).
+
+    ``P`` is the scenario's phase count (max over jobs); jobs with fewer
+    phases are padded with inactive rows (``phase_end <= phase_start``).
+    A flat single-window spec is ``P = 1``.  ``req``/``think`` of the
+    *current* phase (the most recently started one — held across idle gaps
+    so a leftover backlog keeps its service profile) drive each tick.
+    """
+
+    phase_start: jnp.ndarray   # i32[J, P]  phase start tick
+    phase_end: jnp.ndarray     # i32[J, P]  arrivals stop at/after this tick
+    phase_req: jnp.ndarray     # f32[J, P]  request bytes while phase is current
+    phase_think: jnp.ndarray   # i32[J, P]  closed-loop think ticks
+    arrival_mode: jnp.ndarray  # i32[J, P]  ARRIVAL_CLOSED/_INTERVAL/_POISSON
+    arrival_every: jnp.ndarray  # i32[J, P] inter-burst ticks (interval mode)
+    arrival_rate: jnp.ndarray  # f32[J, P]  per-proc arrivals/tick (poisson)
+    procs: jnp.ndarray         # i32[S, J]  client processes of job j on server s
+    overhead_s: jnp.ndarray    # f32[J]  fixed per-request server cost
+
+    # -- legacy single-phase views (the pre-scenario [J] fields) -------------
+    @property
+    def n_phases(self) -> int:
+        return self.phase_start.shape[1]
+
+    @property
+    def start_tick(self) -> jnp.ndarray:
+        """i32[J] first active phase start (horizon when never active)."""
+        real = self.phase_end > self.phase_start
+        return jnp.min(jnp.where(real, self.phase_start, I32_TICK_HORIZON),
+                       axis=1).astype(jnp.int32)
+
+    @property
+    def end_tick(self) -> jnp.ndarray:
+        """i32[J] last tick any phase issues arrivals."""
+        return jnp.max(self.phase_end, axis=1)
+
+    @property
+    def req_bytes(self) -> jnp.ndarray:
+        """f32[J] first-phase request size (the whole story when P = 1)."""
+        return self.phase_req[:, 0]
+
+    @property
+    def think_ticks(self) -> jnp.ndarray:
+        """i32[J] first-phase think time (the whole story when P = 1)."""
+        return self.phase_think[:, 0]
 
 
 class EngineState(NamedTuple):
@@ -156,39 +321,58 @@ def make_workload(
     cfg: EngineConfig,
     jobs: Sequence[dict],
 ) -> tuple[Workload, JobTable]:
-    """Build a workload + job table from job spec dicts.
+    """Build a phased workload + job table from job spec dicts.
 
-    Keys per job: user, group, size (nodes), priority, procs (total client
+    Keys per job (see :data:`JOB_SPEC_KEYS`; unknown keys are a
+    ``TypeError``): user, group, size (nodes), priority, procs (total client
     processes), req_mb, start_s, end_s, think_s, servers (list of server ids
-    the job's files live on; default all), overhead_us.
+    the job's files live on; default all), overhead_us, arrival /
+    interval_s / rate_hz (arrival mode of the flat window), and ``phases``
+    — a list of :data:`PHASE_SPEC_KEYS` dicts that replaces the flat
+    single window with an explicit scenario (checkpoint bursts, ramps,
+    idle gaps).  A spec without ``phases`` lowers to ``P = 1`` and runs
+    bit-identically to the pre-scenario engine.
     """
+    jobs = list(jobs)
     s_, j_ = cfg.n_servers, cfg.max_jobs
-    start = np.zeros((j_,), np.int32)
-    end = np.zeros((j_,), np.int32)
+    per_job = [normalize_phases(spec, f"job {j}") for j, spec in
+               enumerate(jobs)]
+    p_ = max([1] + [len(ph) for ph in per_job])
+    start = np.zeros((j_, p_), np.int32)
+    end = np.zeros((j_, p_), np.int32)
+    req = np.ones((j_, p_), np.float32)
+    think = np.zeros((j_, p_), np.int32)
+    mode = np.zeros((j_, p_), np.int32)
+    every = np.ones((j_, p_), np.int32)
+    rate = np.zeros((j_, p_), np.float32)
     procs = np.zeros((s_, j_), np.int32)
-    req = np.ones((j_,), np.float32)
-    think = np.zeros((j_,), np.int32)
     over = np.zeros((j_,), np.float32)
-    for j, spec in enumerate(jobs):
-        start[j] = _ticks_i32(spec.get("start_s", 0.0), cfg.dt)
-        end[j] = _ticks_i32(spec.get("end_s", 1e9), cfg.dt)
+    for j, (spec, phases) in enumerate(zip(jobs, per_job)):
+        for k, ph in enumerate(phases):
+            start[j, k] = _ticks_i32(ph["start_s"], cfg.dt)
+            end[j, k] = _ticks_i32(ph["end_s"], cfg.dt)
+            req[j, k] = ph["req_mb"] * 1e6
+            think[j, k] = _ticks_i32(ph["think_s"], cfg.dt)
+            mode[j, k] = ARRIVAL_MODES[ph["arrival"]]
+            every[j, k] = max(1, _ticks_i32(ph["interval_s"], cfg.dt))
+            rate[j, k] = ph["rate_hz"] * cfg.dt
         servers = spec.get("servers", list(range(s_)))
         total_procs = int(spec.get("procs", spec.get("size", 1) * 56))
         share = np.zeros((s_,), np.int64)
         for i, sv in enumerate(servers):
             share[sv] += total_procs // len(servers) + (1 if i < total_procs % len(servers) else 0)
         procs[:, j] = share
-        req[j] = float(spec.get("req_mb", 10.0)) * 1e6
-        think[j] = _ticks_i32(spec.get("think_s", 0.0), cfg.dt)
         over[j] = float(spec.get("overhead_us", 0.0)) * 1e-6
         if share.max() > cfg.ring_cap:
             raise ValueError(f"job {j}: {share.max()} procs on one server > ring_cap {cfg.ring_cap}")
     wl = Workload(
-        start_tick=jnp.asarray(start), end_tick=jnp.asarray(end),
-        procs=jnp.asarray(procs), req_bytes=jnp.asarray(req),
-        think_ticks=jnp.asarray(think), overhead_s=jnp.asarray(over),
+        phase_start=jnp.asarray(start), phase_end=jnp.asarray(end),
+        phase_req=jnp.asarray(req), phase_think=jnp.asarray(think),
+        arrival_mode=jnp.asarray(mode), arrival_every=jnp.asarray(every),
+        arrival_rate=jnp.asarray(rate),
+        procs=jnp.asarray(procs), overhead_s=jnp.asarray(over),
     )
-    return wl, make_table(list(jobs), max_jobs=j_)
+    return wl, make_table(jobs, max_jobs=j_)
 
 
 def init_state(cfg: EngineConfig, n_bins: int) -> EngineState:
@@ -249,17 +433,66 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
     worker_bw = cfg.worker_bw
     srv_idx = jnp.arange(s_, dtype=jnp.int32)
     sched = get_scheduler(cfg.scheduler)
+    # Scenario geometry.  ``wl`` is concrete (a trace constant), so which
+    # arrival machinery the tick needs is decided here in Python: a workload
+    # with no open-loop phase traces the exact pre-scenario tick — same ops,
+    # same PRNG stream — which is what keeps P=1 specs bit-identical.
+    phase_real = wl.phase_end > wl.phase_start                     # [J, P]
+    phase_idx = jnp.arange(wl.n_phases, dtype=jnp.int32)[None, :]
+    mode_np = np.asarray(wl.arrival_mode)
+    has_interval = bool((mode_np == ARRIVAL_INTERVAL).any())
+    has_poisson = bool((mode_np == ARRIVAL_POISSON).any())
+    # A closed phase that starts the tick its closed predecessor ends is a
+    # *continuation*: the predecessor's population is still recycling, so
+    # re-injecting procs would multiply the offered load (a 4-step ramp
+    # would run 4x the clients by its last step).  Splitting one window
+    # into contiguous closed phases must be a pure re-profiling.
+    real_np = np.asarray(phase_real)
+    contig = np.zeros_like(real_np)
+    contig[:, 1:] = (real_np[:, 1:] & real_np[:, :-1]
+                     & (np.asarray(wl.phase_start)[:, 1:]
+                        == np.asarray(wl.phase_end)[:, :-1])
+                     & (mode_np[:, 1:] == ARRIVAL_CLOSED)
+                     & (mode_np[:, :-1] == ARRIVAL_CLOSED))
+    fresh_start = jnp.asarray(~contig)                             # [J, P]
 
     def tick(p, state: EngineState, _):
         ctrl = sched.ctrl_overhead_s(p)
         t = state.t
         t_sec = t.astype(jnp.float32) * cfg.dt
-        live = (t >= wl.start_tick) & (t < wl.end_tick)
+        started = (t >= wl.phase_start) & phase_real               # [J, P]
+        phase_live = started & (t < wl.phase_end)
+        live = phase_live.any(axis=1)
+        # Current phase = most recently *started* real phase (held across
+        # idle gaps so a leftover backlog keeps its request profile); 0
+        # before any phase starts (no demand exists yet anyway).
+        cur = jnp.maximum(jnp.max(jnp.where(started, phase_idx, -1),
+                                  axis=1), 0)
+        take_cur = lambda a: jnp.take_along_axis(a, cur[:, None], axis=1)[:, 0]
+        req_now = take_cur(wl.phase_req)                           # f32[J]
+        think_now = take_cur(wl.phase_think)                       # i32[J]
+        recycle = live & (take_cur(wl.arrival_mode) == ARRIVAL_CLOSED)
 
-        # -- 1. arrivals: time-wheel slot + job starts ----------------------
+        # -- 1. arrivals: time-wheel slot + phase starts + open-loop --------
         slot = jnp.mod(t, h_)
+        inject = ((t == wl.phase_start) & phase_real & fresh_start
+                  & (wl.arrival_mode == ARRIVAL_CLOSED)).any(axis=1)
+        if has_interval:
+            gap = jnp.mod(t - wl.phase_start,
+                          jnp.maximum(wl.arrival_every, 1))
+            inject = inject | (phase_live & (gap == 0)
+                               & (wl.arrival_mode == ARRIVAL_INTERVAL)
+                               ).any(axis=1)
         arrivals = state.wheel[:, :, slot] + jnp.where(
-            (t == wl.start_tick)[None, :], wl.procs, 0)
+            inject[None, :], wl.procs, 0)
+        key_carry = state.key
+        if has_poisson:
+            key_carry, kp = jax.random.split(state.key)
+            lam = jnp.where(
+                phase_live & (wl.arrival_mode == ARRIVAL_POISSON),
+                wl.arrival_rate, 0.0).sum(axis=1)                  # f32[J]
+            arrivals = arrivals + jax.random.poisson(
+                kp, lam[None, :] * wl.procs).astype(jnp.int32)
         state = state._replace(wheel=state.wheel.at[:, :, slot].set(0))
         state = _push_arrivals(state, arrivals, t_sec)
 
@@ -270,7 +503,7 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
             synced=state.synced, live=live))
 
         # -- 3. workers: sequential pops within the tick --------------------
-        key, sub = jax.random.split(state.key)
+        key, sub = jax.random.split(key_carry)
         bytes_job = jnp.zeros((j_,), jnp.float32)
         pops_job = jnp.zeros((j_,), jnp.int32)
         idle_ticks = jnp.zeros((), jnp.int32)
@@ -286,20 +519,21 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
                 jnp.take_along_axis(arr_time, (head % cap)[..., None], axis=-1)[..., 0],
                 jnp.inf)
             j_sel = sched.select(cfg, p, shares, head_time, demand, aux,
-                                 wl.req_bytes, kw)
+                                 req_now, kw)
             valid = free & (j_sel >= 0)
             j_safe = jnp.maximum(j_sel, 0)
             onehot = jax.nn.one_hot(j_safe, j_, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
             qcount = qcount - onehot
             head = jnp.mod(head + onehot, cap)
-            rb = wl.req_bytes[j_safe]
+            rb = req_now[j_safe]
             service = rb / worker_bw + wl.overhead_s[j_safe] + ctrl
             start_t = jnp.maximum(free_at[:, w], t_sec)
             new_free = jnp.where(valid, start_t + service, free_at[:, w])
             free_at = free_at.at[:, w].set(new_free)
-            # closed-loop re-arrival after completion + think time
-            job_live = live[j_safe]
-            off = jnp.ceil((new_free - t_sec) / cfg.dt).astype(jnp.int32) + wl.think_ticks[j_safe]
+            # closed-loop re-arrival after completion + think time (open-loop
+            # phases generate arrivals in step 1 instead of recycling pops)
+            job_live = recycle[j_safe]
+            off = jnp.ceil((new_free - t_sec) / cfg.dt).astype(jnp.int32) + think_now[j_safe]
             off = jnp.clip(off, 1, h_ - 1)
             slot2 = jnp.mod(t + off, h_)
             wheel = wheel.at[srv_idx, j_safe, slot2].add(

@@ -1,0 +1,100 @@
+"""Named, JSON-pinnable workload scenarios.
+
+A :class:`Scenario` is the serializable half of the Experiment spec: the
+list of job dicts (the :func:`repro.core.engine.make_workload` vocabulary,
+including per-job ``phases``), plus a name.  It exists so benchmarks and
+tests can *pin* a workload — an ON/OFF checkpoint loop, an idle-window
+opportunity-fairness case, a Fig. 13-style interference mix — as a JSON
+trace, re-load it anywhere, and know both planes run exactly that spec::
+
+    from repro.api import Experiment
+    from repro.scenario import Scenario
+
+    exp = (Experiment(policy="job-fair")
+           .add_job(user=0, procs=56, req_mb=10, end_s=12)
+           .add_job(user=1, procs=56, req_mb=10)
+           .bursts(period_s=4.0, duty=0.5, n=3))
+    exp.scenario("ckpt-interference").save("ckpt.json")
+
+    exp2 = Experiment.from_scenario(Scenario.load("ckpt.json"),
+                                    policy="job-fair")
+    # exp2.run(12) is bit-identical to exp.run(12)
+
+The JSON schema is ``{"name", "version", "jobs": [job-spec, ...]}`` where a
+job spec uses :data:`repro.core.engine.JOB_SPEC_KEYS` and each entry of its
+optional ``phases`` list uses :data:`repro.core.engine.PHASE_SPEC_KEYS`.
+Specs are validated on construction and on load, so a typo in a pinned
+trace (``req_md``) fails with the accepted vocabulary, not a silent
+default.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import json
+
+from repro.core.engine import normalize_phases
+
+SCENARIO_VERSION = 1
+
+
+@dataclasses.dataclass
+class Scenario:
+    """A named, validated workload spec (job dicts, possibly phased)."""
+
+    jobs: list = dataclasses.field(default_factory=list)
+    name: str = ""
+
+    def __post_init__(self):
+        self.jobs = [copy.deepcopy(dict(spec)) for spec in self.jobs]
+        for j, spec in enumerate(self.jobs):
+            # normalize_phases validates keys, windows, and arrival modes
+            tag = f"scenario {self.name!r} job {j}" if self.name else f"job {j}"
+            normalize_phases(spec, tag)
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.jobs)
+
+    def phases(self, job: int) -> list[dict]:
+        """The resolved (seconds-domain, defaults-applied) phase list of one
+        job — what the engine's ``[J, P]`` arrays are built from."""
+        return normalize_phases(self.jobs[job], f"job {job}")
+
+    # -- JSON trace ----------------------------------------------------------
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(
+            {"name": self.name, "version": SCENARIO_VERSION,
+             "jobs": self.jobs}, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        doc = json.loads(text)
+        if not isinstance(doc, dict) or "jobs" not in doc:
+            raise ValueError(
+                "scenario JSON must be an object with a 'jobs' list "
+                "(schema: {name, version, jobs: [job-spec, ...]})")
+        version = doc.get("version", SCENARIO_VERSION)
+        try:
+            version = int(version)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"scenario version must be an integer, got {version!r}"
+            ) from None
+        if version > SCENARIO_VERSION:
+            raise ValueError(
+                f"scenario version {version} is newer than this reader "
+                f"(supports <= {SCENARIO_VERSION})")
+        return cls(jobs=doc["jobs"], name=doc.get("name", ""))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Scenario":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def copy(self) -> "Scenario":
+        return Scenario(jobs=copy.deepcopy(self.jobs), name=self.name)

@@ -1,0 +1,430 @@
+"""Scenario API: phased workloads, open-loop arrivals, JSON traces.
+
+The PR-5 acceptance bars live here:
+
+  * **opportunity fairness** — a scenario with an idle phase shows the idle
+    job's share reallocated under ``themis`` (active job's throughput rises
+    to full capacity) and the active job's throughput beating ``fifo``;
+  * **P=1 bit-identity** — a flat single-window spec runs bit-identically
+    to the same spec written as one explicit phase (the pre-redesign path);
+  * **conservation** — per scheduler, bytes served equal completions ×
+    request size across ON/OFF phases, with nothing dropped;
+  * **cross-plane** — an ON/OFF scenario yields the same share split on the
+    jitted engine and the functional plane's :meth:`replay`.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.core import available_schedulers, make_workload
+from repro.core.engine import EngineConfig
+from repro.scenario import Scenario
+
+_FOCUS = os.environ.get("REPRO_SCHEDULER")
+SCHEDULERS = (_FOCUS,) if _FOCUS else available_schedulers()
+
+
+class TestSpecValidation:
+    """Satellite: unknown spec keys fail loudly with the accepted
+    vocabulary (the ``Policy.parse`` misspelling UX), at declare time."""
+
+    def test_misspelled_job_key_lists_vocabulary(self):
+        with pytest.raises(TypeError, match=r"req_md.*Accepted job keys.*req_mb"):
+            Experiment().add_jobs([dict(user=0, req_md=10)])
+
+    def test_misspelled_phase_key_lists_vocabulary(self):
+        with pytest.raises(TypeError, match=r"strt_s.*Accepted phase keys.*start_s"):
+            Experiment().add_jobs(
+                [dict(user=0, phases=[dict(strt_s=0.0, end_s=1.0)])])
+
+    def test_raw_make_workload_validates_too(self):
+        cfg = EngineConfig(n_servers=1, max_jobs=2)
+        with pytest.raises(TypeError, match="Accepted job keys"):
+            make_workload(cfg, [dict(req_md=10)])
+
+    def test_add_job_rejects_unknown_kwarg(self):
+        with pytest.raises(TypeError):
+            Experiment().add_job(req_md=10)
+
+    def test_overlapping_phases_rejected(self):
+        exp = Experiment().add_job(user=0)
+        exp.phase(start_s=0.0, end_s=2.0)
+        with pytest.raises(ValueError, match="non-overlapping"):
+            exp.phase(start_s=1.0, end_s=3.0)
+
+    def test_empty_phase_rejected(self):
+        with pytest.raises(ValueError, match="empty window"):
+            Experiment().add_job(user=0).phase(start_s=2.0, end_s=2.0)
+
+    def test_phase_needs_an_end(self):
+        with pytest.raises(ValueError, match="end_s or duration_s"):
+            Experiment().add_job(user=0).phase(start_s=0.0)
+
+    def test_unknown_arrival_mode_rejected(self):
+        with pytest.raises(ValueError, match="unknown arrival mode"):
+            Experiment().add_job(user=0, arrival="bursty")
+
+    def test_interval_mode_needs_interval(self):
+        with pytest.raises(ValueError, match="interval_s"):
+            Experiment().add_job(user=0, arrival="interval")
+
+    def test_poisson_mode_needs_rate(self):
+        with pytest.raises(ValueError, match="rate_hz"):
+            Experiment().add_job(user=0, arrival="poisson")
+
+    def test_failed_phase_call_leaves_spec_unchanged(self):
+        exp = Experiment().add_job(user=0)
+        with pytest.raises(ValueError):
+            exp.phase(start_s=0.0)            # no end
+        assert "phases" not in exp.jobs[0]
+        exp.phase(start_s=0.0, end_s=1.0)
+        with pytest.raises(ValueError):
+            exp.phase(start_s=0.5, end_s=2.0)  # overlap
+        assert len(exp.jobs[0]["phases"]) == 1
+
+    def test_failed_arrivals_call_leaves_spec_unchanged(self):
+        exp = Experiment().add_job(user=0, think_s=0.2)
+        with pytest.raises(ValueError):
+            exp.arrivals(arrival="interval")   # no interval_s
+        assert exp.jobs[0].get("arrival") is None
+        assert exp.jobs[0]["think_s"] == 0.2
+
+    def test_add_jobs_validates_phase_windows_at_declare_time(self):
+        """Bulk specs get the same declare-time window/mode validation as
+        add_job — not a late failure inside make_workload."""
+        with pytest.raises(ValueError, match="non-overlapping"):
+            Experiment().add_jobs([dict(user=0, phases=[
+                dict(start_s=0.0, end_s=2.0), dict(start_s=1.0, end_s=3.0)])])
+        with pytest.raises(ValueError, match="interval_s"):
+            Experiment().add_jobs([dict(user=0, arrival="interval")])
+
+    def test_arrivals_window_keys_rejected_on_phased_jobs(self):
+        """start_s/end_s would be silently shadowed by the phase windows;
+        refuse instead, atomically (flat job 0 stays untouched)."""
+        exp = (Experiment().add_job(user=0, start_s=0.5)
+               .add_job(user=1).phase(start_s=0.0, end_s=1.0))
+        with pytest.raises(ValueError, match="explicit phases"):
+            exp.arrivals(job=1, end_s=6.0)
+        with pytest.raises(ValueError, match="explicit phases"):
+            exp.arrivals(start_s=1.0)          # all-jobs form, job 1 phased
+        assert exp.jobs[0]["start_s"] == 0.5   # atomic: job 0 not updated
+        # think_s stays legal on phased jobs: it is the inherited default
+        exp.arrivals(job=1, think_s=0.1)
+        assert exp.jobs[1]["think_s"] == 0.1
+
+    def test_bursts_duty_one_is_contiguous_not_overlap(self):
+        """Accumulated float starts/ends differ by ulps at duty=1.0; the
+        boundary must read as contiguous, not as a spurious overlap."""
+        exp = (Experiment().add_job(user=0)
+               .bursts(period_s=0.1, duty=1.0, n=20, start_s=0.3))
+        assert len(exp.jobs[0]["phases"]) == 20
+
+    def test_bursts_end_s_keeps_final_fitting_burst(self):
+        """A burst whose ON window ends exactly at end_s fits; and a window
+        shorter than one burst must raise, not silently leave the job a
+        flat full-run loop."""
+        exp = (Experiment().add_job(user=0)
+               .bursts(period_s=4.0, duty=0.25, end_s=10.0))
+        starts = [ph["start_s"] for ph in exp.jobs[0]["phases"]]
+        assert starts == [0.0, 4.0, 8.0]       # 8..9 s fits before 10
+        with pytest.raises(ValueError, match="shorter than one"):
+            Experiment().add_job(user=0).bursts(period_s=4.0, duty=0.25,
+                                                end_s=0.5)
+
+    def test_add_jobs_deepcopies_specs(self):
+        """Nested phase lists must not stay aliased to the caller's dicts
+        (or across Experiments built from one spec list)."""
+        spec = dict(user=0, phases=[dict(start_s=0.0, end_s=1.0)])
+        e1 = Experiment().add_jobs([spec])
+        e2 = Experiment().add_jobs([spec])
+        e1.phase(job=0, start_s=2.0, end_s=3.0)
+        assert len(spec["phases"]) == 1
+        assert len(e2.jobs[0]["phases"]) == 1
+        assert len(e1.jobs[0]["phases"]) == 2
+
+    def test_arrivals_all_jobs_rolls_back_atomically(self):
+        """A batch arrivals() that fails on job k must leave every job
+        untouched, not just job k."""
+        exp = (Experiment().add_job(user=0, rate_hz=5.0).add_job(user=1))
+        with pytest.raises(ValueError, match="rate_hz"):
+            exp.arrivals(arrival="poisson")    # job 1 has no rate_hz
+        assert exp.jobs[0].get("arrival") is None
+
+
+class TestJobIndexErrors:
+    """Satellite: a bad ``job=`` index fails at call time with the declared
+    job count, not late (or silently) inside ``make_workload``."""
+
+    def _two_jobs(self):
+        return Experiment().add_job(user=0).add_job(user=1)
+
+    @pytest.mark.parametrize("bad", [2, -1, 17])
+    def test_arrivals_out_of_range(self, bad):
+        with pytest.raises(IndexError, match=r"declares 2 job\(s\)"):
+            self._two_jobs().arrivals(job=bad, start_s=1.0)
+
+    def test_phase_bursts_ramp_out_of_range(self):
+        for call in (lambda e: e.phase(job=5, start_s=0, end_s=1),
+                     lambda e: e.bursts(job=5, period_s=1, duty=0.5, n=1),
+                     lambda e: e.ramp(job=5, start_s=0, duration_s=1,
+                                      req_mb=(1, 2))):
+            with pytest.raises(IndexError, match=r"declares 2 job\(s\)"):
+                call(self._two_jobs())
+
+    def test_empty_experiment_still_valueerror(self):
+        # the pre-scenario contract: no jobs at all is a ValueError
+        with pytest.raises(ValueError, match="add_job"):
+            Experiment().arrivals(job=0, start_s=1.0)
+        with pytest.raises(ValueError, match="add_job"):
+            Experiment().phase(start_s=0.0, end_s=1.0)
+
+
+def _flat_exp(sched, policy, **kw):
+    return (Experiment(policy=policy, scheduler=sched, n_workers=2, **kw)
+            .add_job(user=0, procs=6, req_mb=10, start_s=0.1, end_s=0.8,
+                     think_s=0.02)
+            .add_job(user=1, procs=4, req_mb=4, end_s=0.7))
+
+
+class TestSinglePhaseBitIdentity:
+    """Acceptance: a flat spec (the pre-redesign vocabulary) and the same
+    spec written as one explicit phase produce bit-identical runs — the
+    flat path *is* the P=1 phased path."""
+
+    @pytest.mark.parametrize("sched,policy", [("themis", "job-fair"),
+                                              ("fifo", None),
+                                              ("adaptbf", None)])
+    def test_flat_equals_explicit_single_phase(self, sched, policy):
+        flat = _flat_exp(sched, policy).run(1.0)
+        phased = (Experiment(policy=policy, scheduler=sched, n_workers=2)
+                  .add_job(user=0, procs=6, req_mb=10, think_s=0.02,
+                           phases=[dict(start_s=0.1, end_s=0.8)])
+                  .add_job(user=1, procs=4, req_mb=4,
+                           phases=[dict(start_s=0.0, end_s=0.7)])
+                  ).run(1.0)
+        np.testing.assert_array_equal(flat.gbps, phased.gbps)
+        np.testing.assert_array_equal(flat.issued, phased.issued)
+        np.testing.assert_array_equal(flat.completed, phased.completed)
+
+    def test_contiguous_closed_phases_are_pure_reprofiling(self):
+        """Splitting one closed window into back-to-back phases must not
+        re-inject the client population (a 4-step ramp would otherwise run
+        4x the clients by its last step): with an identical request profile
+        the split run is bit-identical to the flat window."""
+        flat = (Experiment(policy="job-fair", scheduler="themis",
+                           n_workers=2)
+                .add_job(user=0, procs=6, req_mb=10, think_s=0.02,
+                         end_s=0.8)).run(1.0)
+        split = (Experiment(policy="job-fair", scheduler="themis",
+                            n_workers=2)
+                 .add_job(user=0, procs=6, req_mb=10, think_s=0.02)
+                 .phase(start_s=0.0, end_s=0.3)
+                 .phase(start_s=0.3, end_s=0.8)).run(1.0)
+        np.testing.assert_array_equal(flat.gbps, split.gbps)
+        np.testing.assert_array_equal(flat.issued, split.issued)
+
+    def test_gap_after_closed_phase_does_reinject(self):
+        """...but a phase after an idle gap starts a fresh burst: the
+        returning population must be re-injected or the job stays silent."""
+        res = (Experiment(policy="job-fair", scheduler="themis",
+                          n_workers=2)
+               .add_job(user=0, procs=6, req_mb=10)
+               .phase(start_s=0.0, end_s=0.3)
+               .phase(start_s=0.6, end_s=0.9)).run(1.0)
+        assert res.mean_gbps(0, 0.6, 0.9) > 0
+
+    def test_legacy_workload_views(self):
+        """The [J] views the pre-scenario engine exposed still answer for
+        P=1 workloads (and summarize multi-phase ones)."""
+        cfg = EngineConfig(n_servers=1, max_jobs=4)
+        wl, _ = make_workload(cfg, [
+            dict(start_s=1.0, end_s=2.0, req_mb=5, think_s=0.1),
+            dict(phases=[dict(start_s=3.0, end_s=4.0),
+                         dict(start_s=6.0, end_s=7.0)])])
+        assert wl.n_phases == 2
+        assert int(wl.start_tick[0]) == 1000 and int(wl.end_tick[0]) == 2000
+        assert float(wl.req_bytes[0]) == 5e6
+        assert int(wl.think_ticks[0]) == 100
+        assert int(wl.start_tick[1]) == 3000 and int(wl.end_tick[1]) == 7000
+
+
+ONOFF = [dict(user=0, procs=6, req_mb=10, end_s=1.2),
+         dict(user=1, procs=6, req_mb=5, phases=[
+             dict(start_s=0.0, end_s=0.4),
+             dict(start_s=0.7, end_s=1.1)])]
+
+
+class TestPhasedConservation:
+    """Satellite: per scheduler, bytes served == completions × request size
+    across an ON/OFF scenario (bytes are attributed at pop, request size is
+    constant per job), with nothing dropped and no service before the
+    scenario starts."""
+
+    @pytest.mark.parametrize("sched", SCHEDULERS)
+    def test_bytes_match_completions(self, sched):
+        res = (Experiment(policy="job-fair", scheduler=sched, n_workers=2)
+               .add_jobs(ONOFF).run(1.4))
+        assert res.dropped == 0
+        for j, req in ((0, 10e6), (1, 5e6)):
+            assert res.completed[j] > 0
+            assert res.completed[j] <= res.issued[j]
+            total = res.gbps[j].sum() * res.bin_s * 1e9
+            assert total == pytest.approx(res.completed[j] * req, rel=1e-5)
+
+    def test_idle_gap_serves_nothing_after_drain(self):
+        res = (Experiment(policy="job-fair", scheduler="themis", n_workers=2)
+               .add_jobs(ONOFF).run(1.4))
+        # B's backlog at phase end (≤ procs requests) drains quickly; the
+        # rest of the gap and the post-scenario tail must be silent.
+        assert res.mean_gbps(1, 0.5, 0.7) == 0.0
+        assert res.mean_gbps(1, 1.3, 1.4) == 0.0
+
+
+class TestOpenLoopArrivals:
+    def test_interval_bursts_decouple_arrivals_from_think(self):
+        """Open-loop: every interval all procs issue one request, however
+        long the job thinks — a closed loop with this think time would
+        issue nothing beyond the initial burst in 1 s."""
+        def issued(arrival_kw):
+            exp = (Experiment(scheduler="fifo", n_workers=2)
+                   .add_job(user=0, procs=4, req_mb=1, think_s=30.0,
+                            end_s=1.0, **arrival_kw))
+            return int(exp.run(1.2).issued[0])
+        assert issued(dict(arrival="interval", interval_s=0.1)) == 4 * 10
+        assert issued(dict()) == 4        # closed loop: initial burst only
+
+    def test_poisson_is_seed_deterministic(self):
+        def run_seeded(seed):
+            return (Experiment(scheduler="fifo", n_workers=2, seed=seed)
+                    .add_job(user=0, procs=8, req_mb=1, arrival="poisson",
+                             rate_hz=40, end_s=1.0)).run(1.0)
+        a, b, c = run_seeded(0), run_seeded(0), run_seeded(7)
+        np.testing.assert_array_equal(a.gbps, b.gbps)
+        assert a.issued[0] != c.issued[0] or not np.array_equal(a.gbps, c.gbps)
+        # rate sanity: ~ procs * rate_hz * 1 s arrivals
+        assert 0.5 * 320 < int(a.issued[0]) < 1.5 * 320
+
+    def test_poisson_keeps_closed_loop_jobs_untouched(self):
+        """Adding a poisson job must not perturb other jobs' arrivals."""
+        res = (Experiment(policy="job-fair", scheduler="themis", n_workers=2)
+               .add_job(user=0, procs=4, req_mb=2, end_s=0.5)
+               .add_job(user=1, procs=4, req_mb=1, arrival="poisson",
+                        rate_hz=20, end_s=0.5)).run(0.6)
+        assert res.issued[0] > 0 and res.issued[1] > 0
+        assert res.dropped == 0
+
+
+class TestOpportunityFairnessScenario:
+    """Acceptance: an idle phase reallocates the idle job's share (paper
+    §3 / §5.3.1).  Job A is a steady 1-node app; job B is a heavy burster
+    that goes idle mid-run.  Under ``themis`` job-fair, A rises to full
+    capacity in B's idle window, and A's throughput while B is active
+    beats FIFO (where B's deep closed-loop backlog starves A)."""
+
+    T = 1.8
+    BUSY = (0.1, T / 3)                 # B active
+    IDLE = (T / 3 + 0.4, 2 * T / 3)     # B idle, backlog drained
+
+    def _run(self, sched, policy):
+        return (Experiment(policy=policy, scheduler=sched)
+                .add_job(user=0, size=1, procs=56, req_mb=10, end_s=self.T)
+                .add_job(user=1, size=1, procs=224, req_mb=10)
+                .phase(start_s=0.0, end_s=self.T / 3)
+                .phase(start_s=2 * self.T / 3, end_s=self.T)).run(self.T)
+
+    def test_idle_share_reallocated_and_beats_fifo(self):
+        th = self._run("themis", "job-fair")
+        ff = self._run("fifo", None)
+        a_busy, a_idle = th.mean_gbps(0, *self.BUSY), th.mean_gbps(0, *self.IDLE)
+        # reallocation: A absorbs B's idle cycles (≈ full 22 GB/s server)
+        assert a_idle > 1.6 * a_busy
+        assert a_idle > 0.85 * 22.0
+        # fairness while B is active: A holds its share vs FIFO starvation
+        assert a_busy > 1.5 * ff.mean_gbps(0, *self.BUSY)
+        # and B actually went idle rather than being starved
+        assert th.mean_gbps(1, *self.IDLE) == pytest.approx(0.0, abs=0.2)
+
+
+class TestCrossPlaneOnOff:
+    """Satellite: the same ON/OFF scenario yields the same share split on
+    the jitted engine and on the functional plane's scenario replay — the
+    two planes run one scheduler core, phased workloads included."""
+
+    def _exp(self):
+        return (Experiment(policy="job-fair", scheduler="themis",
+                           n_workers=4)
+                .add_job(user=0, procs=8, req_mb=10, end_s=2.0)
+                .add_job(user=1, procs=8, req_mb=10)
+                .phase(start_s=0.0, end_s=1.0))
+
+    def test_shares_agree_in_both_windows(self):
+        res = self._exp().run(2.0)
+        g0 = res.mean_gbps(0, 0.2, 0.9)
+        g1 = res.mean_gbps(1, 0.2, 0.9)
+        eng_busy = g0 / (g0 + g1)
+        off0 = res.mean_gbps(0, 1.3, 1.9)
+        eng_idle = off0 / max(off0 + res.mean_gbps(1, 1.3, 1.9), 1e-9)
+
+        # small rounds + deep bursts: the per-round head is a ~12-sample
+        # binomial, so average many rounds to tame the variance
+        rr = self._exp().serve(autodrain=False).replay(
+            2.0, round_s=0.125, reqs_per_round=24)
+        bb_busy = rr.window_share(0, 0.125, 1.0)  # skip the warmup round
+        bb_idle = rr.window_share(0, 1.25, 2.0)
+        assert eng_busy == pytest.approx(0.5, abs=0.1)
+        assert bb_busy == pytest.approx(eng_busy, abs=0.15)
+        assert eng_idle == pytest.approx(1.0, abs=0.05)
+        assert bb_idle == pytest.approx(eng_idle, abs=0.05)
+
+
+class TestScenarioJson:
+    """Satellite: scenarios pin as JSON traces and reload to bit-identical
+    runs."""
+
+    def _exp(self):
+        return (Experiment(policy="job-fair", scheduler="themis",
+                           n_workers=2)
+                .add_job(user=0, procs=4, req_mb=5, end_s=0.6)
+                .add_job(user=1, procs=4, req_mb=2)
+                .bursts(period_s=0.3, duty=0.5, n=2))
+
+    def test_round_trip_runs_bit_identically(self):
+        exp = self._exp()
+        scn = exp.scenario("onoff-pin")
+        clone = Experiment.from_scenario(
+            Scenario.from_json(scn.to_json()),
+            policy="job-fair", scheduler="themis", n_workers=2)
+        a, b = exp.run(0.6), clone.run(0.6)
+        np.testing.assert_array_equal(a.gbps, b.gbps)
+        np.testing.assert_array_equal(a.completed, b.completed)
+
+    def test_scenario_snapshot_is_isolated(self):
+        exp = self._exp()
+        scn = exp.scenario("pin")
+        exp.arrivals(job=0, think_s=0.5)
+        assert "think_s" not in scn.jobs[0] or scn.jobs[0]["think_s"] != 0.5
+
+    def test_save_and_load(self, tmp_path):
+        path = tmp_path / "scn.json"
+        self._exp().scenario("disk-pin").save(str(path))
+        scn = Scenario.load(str(path))
+        assert scn.name == "disk-pin" and scn.n_jobs == 2
+        assert scn.phases(1)[0]["end_s"] == pytest.approx(0.15)
+
+    def test_bad_documents_rejected(self):
+        with pytest.raises(ValueError, match="'jobs'"):
+            Scenario.from_json('{"name": "x"}')
+        with pytest.raises(ValueError, match="version"):
+            Scenario.from_json('{"version": 99, "jobs": []}')
+        with pytest.raises(ValueError, match="integer"):
+            Scenario.from_json('{"version": "two", "jobs": []}')
+        with pytest.raises(TypeError, match="Accepted job keys"):
+            Scenario.from_json('{"jobs": [{"req_md": 3}]}')
+
+    def test_experiment_to_json_sugar(self):
+        import json
+        doc = json.loads(self._exp().to_json("sugar"))
+        assert doc["name"] == "sugar" and len(doc["jobs"]) == 2
+        assert len(doc["jobs"][1]["phases"]) == 2

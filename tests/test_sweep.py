@@ -66,6 +66,33 @@ class TestCompileOnce:
             make_exp("adaptbf", params=AdaptbfParams(repay=r)).run(0.2)
         assert len(engine.TRACE_LOG) == 2
 
+    def test_phased_scenario_sweeps_in_one_trace(self):
+        """Scenario acceptance: phases are workload *data* ([J, P] arrays
+        inside the one jitted scan), so a phased, partly open-loop scenario
+        sweeps a params grid in exactly one engine trace too."""
+        grid = [AdaptbfParams(burst_s=b, repay=r)
+                for b in (0.5, 1.0) for r in (0.1, 0.5)]
+        exp = (Experiment(policy="job-fair", scheduler="adaptbf", n_workers=2)
+               .add_job(user=0, procs=6, req_mb=10, end_s=0.4)
+               .add_job(user=1, procs=6, req_mb=10)
+               .bursts(period_s=0.2, duty=0.5, n=2)
+               .add_job(user=2, procs=4, req_mb=2, arrival="interval",
+                        interval_s=0.05, end_s=0.4))
+        engine.TRACE_LOG.clear()
+        sw = exp.sweep(grid, 0.4, seeds=range(4))
+        assert len(engine.TRACE_LOG) == 1, engine.TRACE_LOG
+        assert sw.gbps.shape[:2] == (4, 4)
+        # every lane still bit-identical to its sequential phased run
+        res = (Experiment(policy="job-fair", scheduler="adaptbf",
+                          n_workers=2, params=grid[2], seed=1)
+               .add_job(user=0, procs=6, req_mb=10, end_s=0.4)
+               .add_job(user=1, procs=6, req_mb=10)
+               .bursts(period_s=0.2, duty=0.5, n=2)
+               .add_job(user=2, procs=4, req_mb=2, arrival="interval",
+                        interval_s=0.05, end_s=0.4)).run(0.4)
+        np.testing.assert_array_equal(sw.gbps[2, 1], res.gbps)
+        np.testing.assert_array_equal(sw.completed[2, 1], res.completed)
+
 
 class TestEverySchedulerSweepBitIdentity:
     """Satellite acceptance: for every registered scheduler, each point of a
