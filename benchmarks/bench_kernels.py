@@ -16,12 +16,15 @@ from repro.core.policy import compute_job_shares_from_table
 from repro.kernels.token_select.ref import token_select_ref
 
 
-def _time(fn, *args, iters=50):
-    fn(*args)  # compile
+def _time(fn, *args, iters=50, warmup=1):
+    """Mean us/call.  Blocks on every iteration — async dispatch otherwise
+    queues all `iters` calls and only the last one is actually awaited, which
+    understates per-call latency and overlaps compute across iterations."""
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))  # compile + warm caches
     t0 = time.perf_counter()
     for _ in range(iters):
-        r = fn(*args)
-    jax.block_until_ready(r)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
 
 

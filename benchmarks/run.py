@@ -24,6 +24,7 @@ from .bench_lambda import run_fig14
 from .bench_policies import run_fig8
 from .bench_scaling import run_fig7
 from .bench_scenarios import run_scen
+from .bench_tick import run_kern
 from .common import drain_run_log, emit
 
 SECTIONS = {
@@ -33,6 +34,7 @@ SECTIONS = {
     "fig12": run_fig12,
     "fig13": run_fig13,
     "fig14": run_fig14,
+    "kern": run_kern,
     "micro": run_micro,
     "scen": run_scen,
 }

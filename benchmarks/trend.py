@@ -121,12 +121,16 @@ def _series(history: dict) -> dict[tuple, list[dict]]:
 
 def direction(name: str) -> Optional[int]:
     """+1 higher-is-better, -1 lower-is-better, None ungated."""
-    if "_vs_" in name:
-        return None
+    if "_vs_" in name or "budget" in name:
+        return None   # ratios of gated quantities / analytic constants
     if "std" in name:
         return -1
+    if "speedup" in name:
+        return +1
     if "gbps" in name or "jain" in name:
         return +1
+    if "_us_" in name or name.endswith("_us"):
+        return -1     # raw latency rows (kern ladder)
     return None
 
 

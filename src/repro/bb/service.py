@@ -163,17 +163,21 @@ class BBCluster:
                  scheduler: str = "themis", scheduler_params=None,
                  n_workers: int = 8,
                  bandwidth: float = 22e9, max_jobs: int = 32,
-                 lam_s: float = 0.5, seed: int = 0, stripes: int = 1):
+                 lam_s: float = 0.5, seed: int = 0, stripes: int = 1,
+                 tick_impl: str = "auto"):
         self.fs = FileSystem(n_servers, default_stripes=stripes)
         self.servers = [BBServer(s, self.fs, n_workers=n_workers,
                                  bandwidth=bandwidth) for s in range(n_servers)]
         self.policy = Policy.parse(policy) if isinstance(policy, str) else policy
         self.sched = get_scheduler(scheduler)
+        # tick_impl reaches the scheduler hooks through cfg: on this plane the
+        # draws are eager pop-by-pop, so it selects the token_select impl
+        # inside Scheduler.select (same vocabulary as the engine's seam).
         self.cfg = EngineConfig(
             n_servers=n_servers, max_jobs=max_jobs, n_workers=n_workers,
             server_bw=bandwidth, scheduler=scheduler,
             scheduler_params=scheduler_params, policy=self.policy,
-            seed=seed)
+            tick_impl=tick_impl, seed=seed)
         self.aux = self.sched.init_aux(n_servers, max_jobs)
         self.max_jobs = max_jobs
         self.lam_s = lam_s

@@ -58,7 +58,8 @@ from .global_sync import sync_segments
 from .job_table import JobTable, make_table
 from .params import SchedulerParams, stack_params
 from .policy import Policy
-from .scheduler import TickView, get_scheduler
+from .scheduler import Scheduler, TickView, get_scheduler
+from repro.kernels.tick_step import tick_step
 
 #: One entry is appended each time an engine scan is traced for XLA.
 #: ``run``/``run_batch`` build a fresh jit per call, so every entry
@@ -122,12 +123,44 @@ class EngineConfig:
     # Fabric model for multi-server scaling (calibrated to paper Fig. 7:
     # efficiency ~ S^-0.08 => 82% at 8 servers, 68% at 128).
     fabric_exponent: float = 0.0
+    # Worker-phase implementation: "ref" is the legacy per-worker lax.scan;
+    # "pallas" routes the whole phase through the fused tick-step kernel
+    # (repro.kernels.tick_step — bit-identical, interpret-mode off TPU);
+    # "auto" picks pallas on TPU.  Schedulers without kernel support
+    # (see Scheduler.kernel_tick) transparently fall back to "ref" — see
+    # resolve_tick_impl.
+    tick_impl: str = "auto"
     seed: int = 0
 
     @property
     def worker_bw(self) -> float:
         eff = float(self.n_servers) ** (-self.fabric_exponent)
         return self.server_bw / self.n_workers * eff
+
+
+#: ``EngineConfig.tick_impl`` vocabulary.
+TICK_IMPLS = ("auto", "ref", "pallas")
+
+
+def resolve_tick_impl(cfg: "EngineConfig", sched: Scheduler) -> str:
+    """Decide the worker-phase implementation for this (config, scheduler).
+
+    ``ref`` always honors the request.  The fused path additionally needs the
+    scheduler to be kernel-lowered: ``kernel_tick`` set AND ``charge`` still
+    the base no-op (the kernel carries no aux state through the draws), else
+    the request falls back to ``ref`` transparently — a non-lowered scheduler
+    never errors, it just runs the scan.  ``auto`` resolves to ``pallas``
+    only on TPU backends.
+    """
+    impl = cfg.tick_impl
+    if impl not in TICK_IMPLS:
+        raise ValueError(f"unknown tick_impl {impl!r}; one of {TICK_IMPLS}")
+    lowered = sched.kernel_tick and type(sched).charge is Scheduler.charge
+    if impl == "ref" or not lowered:
+        return "ref"
+    if impl == "pallas":
+        return "pallas"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 #: Arrival modes a phase can run in (``Workload.arrival_mode`` codes).
@@ -433,6 +466,7 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
     worker_bw = cfg.worker_bw
     srv_idx = jnp.arange(s_, dtype=jnp.int32)
     sched = get_scheduler(cfg.scheduler)
+    tick_impl = resolve_tick_impl(cfg, sched)
     # Scenario geometry.  ``wl`` is concrete (a trace constant), so which
     # arrival machinery the tick needs is decided here in Python: a workload
     # with no open-loop phase traces the exact pre-scenario tick — same ops,
@@ -508,6 +542,54 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
         pops_job = jnp.zeros((j_,), jnp.int32)
         idle_ticks = jnp.zeros((), jnp.int32)
 
+        if tick_impl == "pallas":
+            # Fused path: all W draws in one tick-step kernel invocation.
+            # PRNG stream identity: the per-worker uniforms are precomputed
+            # with the exact fold_in/uniform sequence the scan's select hook
+            # consumes, so the run's key trajectory is unchanged.  Each
+            # worker only ever reads/writes its own free_at column and
+            # arr_time is read-only across the phase, so free/window can be
+            # materialized up front; a worker pops at ring offset pops[s,j]
+            # < W, which is why a [S, J, W] window covers every draw.
+            free = state.free_at < t_sec + cfg.dt                  # [S, W]
+            u_all = jnp.stack(
+                [jax.random.uniform(jax.random.fold_in(sub, w), (s_,))
+                 for w in range(w_)], axis=1)                      # [S, W]
+            koff = jnp.arange(w_, dtype=jnp.int32)[None, None, :]
+            ring_idx = jnp.mod(state.head[..., None] + koff, cap)
+            window = jnp.take_along_axis(state.arr_time, ring_idx, axis=-1)
+            sel, valid, demand_any, qcount, pops_sj = tick_step(
+                shares, state.qcount, window, free, u_all,
+                mode=sched.kernel_select_mode, impl="pallas")
+            head = jnp.mod(state.head + pops_sj, cap)
+            arr_time = state.arr_time
+            j_safe = jnp.maximum(sel, 0)                           # [S, W]
+            rb = req_now[j_safe]
+            service = rb / worker_bw + wl.overhead_s[j_safe] + ctrl
+            start_t = jnp.maximum(state.free_at, t_sec)
+            free_at = jnp.where(valid, start_t + service, state.free_at)
+            off = jnp.clip(
+                jnp.ceil((free_at - t_sec) / cfg.dt).astype(jnp.int32)
+                + think_now[j_safe], 1, h_ - 1)
+            slot2 = jnp.mod(t + off, h_)
+            live_add = (valid & recycle[j_safe]).astype(jnp.int32)
+            add_b = jnp.where(valid, rb, 0.0)
+            wheel = state.wheel
+            # Per-worker scatter order preserved (float adds must replay the
+            # scan's accumulation order bit-for-bit).
+            for w in range(w_):
+                wheel = wheel.at[srv_idx, j_safe[:, w], slot2[:, w]].add(
+                    live_add[:, w])
+                bytes_job = bytes_job.at[j_safe[:, w]].add(add_b[:, w])
+                pops_job = pops_job.at[j_safe[:, w]].add(
+                    valid[:, w].astype(jnp.int32))
+            idle_ticks = (free & ~valid & demand_any).sum().astype(jnp.int32)
+            # Lowered schedulers have the base no-op charge (checked by
+            # resolve_tick_impl), so aux passes through from pre_tick.
+            carry = (qcount, head, arr_time, wheel, free_at, aux, bytes_job,
+                     pops_job, idle_ticks)
+            return _finish(state, carry, key, t, live)
+
         def worker_body(carry, w):
             (qcount, head, arr_time, wheel, free_at, aux, bytes_job, pops_job,
              idle_ticks) = carry
@@ -549,6 +631,11 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
         carry = (state.qcount, state.head, state.arr_time, state.wheel,
                  state.free_at, aux, bytes_job, pops_job, idle_ticks)
         carry, _ = jax.lax.scan(worker_body, carry, jnp.arange(w_, dtype=jnp.int32))
+        return _finish(state, carry, key, t, live)
+
+    def _finish(state: EngineState, carry, key, t, live):
+        """Steps shared by both worker-phase implementations: fold the phase
+        results into the state (step 3 tail) and run the λ-sync (step 4)."""
         (qcount, head, arr_time, wheel, free_at, aux, bytes_job, pops_job,
          idle_ticks) = carry
 

@@ -78,6 +78,15 @@ class Scheduler:
     name: str = ""
     uses_segments: bool = False   # participates in the λ-sync segment exchange
     has_intervals: bool = False   # needs μ-interval budget updates to progress
+    #: Kernel capability: the scheduler's whole worker phase lowers to the
+    #: fused tick-step kernel (:mod:`repro.kernels.tick_step`).  Requires the
+    #: per-draw select to be one of the lowered modes below AND ``charge`` to
+    #: be the base no-op (the kernel carries no aux state); the engine's
+    #: ``resolve_tick_impl`` checks both and falls back to the scan otherwise.
+    kernel_tick: bool = False
+    #: Which in-kernel select the fused tick runs for this scheduler — a name
+    #: from ``repro.kernels.tick_step.ref.MODES``.
+    kernel_select_mode: str = "themis"
     #: The frozen parameter schema this scheduler owns (repro.core.params).
     params_cls: Type[params_.SchedulerParams] = params_.SchedulerParams
 
@@ -190,6 +199,8 @@ class ThemisScheduler(Scheduler):
     uniform draws."""
 
     uses_segments = True
+    kernel_tick = True
+    kernel_select_mode = "themis"
     params_cls = params_.ThemisParams
 
     def tick_shares(self, cfg, table: JobTable, view: TickView) -> jnp.ndarray:
@@ -204,13 +215,19 @@ class ThemisScheduler(Scheduler):
 
     def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         u = jax.random.uniform(key, (shares.shape[0],))
-        return select_job(shares, demand, u)
+        # The per-draw impl seam (service plane / serving engine): the jitted
+        # engine routes whole ticks through the fused tick-step kernel
+        # instead, so this only fires on the eager pop-by-pop paths.
+        return select_job(shares, demand, u,
+                          impl=getattr(cfg, "tick_impl", "auto"))
 
 
 @register("fifo")
 class FifoScheduler(Scheduler):
     """Arrival-order across jobs (production default, paper §1)."""
 
+    kernel_tick = True
+    kernel_select_mode = "fifo"
     params_cls = params_.FifoParams
 
     def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):

@@ -4,13 +4,19 @@ The paper's workers draw ``u ~ U[0,1)`` and serve the job whose probability
 segment contains ``u`` (§3).  On TPU/JAX the lock-free queue pop becomes a
 branchless masked weighted choice: mask shares by queue occupancy, renormalize
 (opportunity fairness / token recycling), prefix-sum, and binary-search the
-draw.  ``repro.kernels.token_select`` provides the fused Pallas version of
-:func:`select_job`; this module is the reference used by the engine on CPU.
+draw.  :func:`select_job` routes through the
+``repro.kernels.token_select.ops.token_select`` dispatcher — the pure-jnp
+oracle on CPU (bit-exact with the historical in-module math), the fused
+Pallas kernel on TPU (or anywhere with ``impl="pallas"``, interpret-mode off
+TPU) — so the engine, the burst-buffer service, and the serving engine all
+draw through one seam.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.token_select.ops import token_select
 
 
 def opportunity_renorm(shares: jnp.ndarray, demand: jnp.ndarray) -> jnp.ndarray:
@@ -39,32 +45,30 @@ def segments(shares: jnp.ndarray) -> jnp.ndarray:
     return jnp.cumsum(shares, axis=-1)
 
 
-def select_job(shares: jnp.ndarray, demand: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+def select_job(shares: jnp.ndarray, demand: jnp.ndarray, u: jnp.ndarray,
+               impl: str = "auto") -> jnp.ndarray:
     """One worker token draw: pick the job whose segment contains ``u``.
 
     shares: f32[..., J] (need not be normalized), demand: bool[..., J],
     u: f32[...] in [0,1).  Returns int32[...] job index, or -1 when no job has
     demand (worker idles — opportunity fairness never blocks on idle slots).
+
+    ``impl`` selects the fused draw implementation (see
+    :mod:`repro.kernels.token_select.ops`): ``auto`` (Pallas on TPU, jnp
+    oracle elsewhere), ``ref``, or ``pallas``.  Both implementations run the
+    same op sequence, so the draw is bit-identical across them on CPU.
     """
-    probs = opportunity_renorm(shares, demand)
-    # Work conservation: if demand exists but the policy gave it no mass yet
-    # (e.g. a job between syncs), fall back to uniform over demanded jobs —
-    # idle cycles are always reassigned.
-    no_mass = probs.sum(axis=-1, keepdims=True) <= 0
-    probs = jnp.where(no_mass, opportunity_renorm(jnp.ones_like(shares), demand), probs)
-    seg = segments(probs)
-    total = seg[..., -1]
-    # Branchless segment search: count boundaries <= u.
-    idx = jnp.sum((seg <= u[..., None]).astype(jnp.int32), axis=-1)
-    idx = jnp.clip(idx, 0, shares.shape[-1] - 1)
-    # -1 when nothing has demand at all.
-    idx = jnp.where(total > 0, idx, -1)
-    # Guard: ensure the selected slot actually has demand (float roundoff at
-    # segment edges). If not, take the first demanded slot.
-    has = jnp.take_along_axis(demand.astype(jnp.int32), jnp.maximum(idx, 0)[..., None], axis=-1)[..., 0]
-    first_demand = jnp.argmax(demand.astype(jnp.int32), axis=-1).astype(jnp.int32)
-    idx = jnp.where((idx >= 0) & (has == 0), first_demand, idx)
-    return idx.astype(jnp.int32)
+    shares = jnp.asarray(shares)
+    demand = jnp.asarray(demand)
+    u = jnp.asarray(u)
+    j = shares.shape[-1]
+    batch = shares.shape[:-1]
+    idx = token_select(
+        shares.reshape((-1, j)),
+        demand.reshape((-1, j)).astype(jnp.int32),
+        u.reshape((-1, 1)).astype(jnp.float32),
+        impl=impl)[:, 0]
+    return idx.reshape(batch)
 
 
 def draw_uniform(key: jax.Array, shape) -> jnp.ndarray:

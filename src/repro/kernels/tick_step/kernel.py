@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: the engine tick's whole worker phase, fused.
+
+The engine's hot path is a W-step ``lax.scan`` of O(S·J) gathers/scatters —
+per worker: mask demand, renormalize the share table, prefix-sum, segment
+search, pop, advance the ring head.  This kernel answers all W draws in ONE
+invocation: the ``[S, J]`` queue state lives in VMEM scratch and is mutated
+across the (statically unrolled) worker loop, so the share table is loaded
+once per server block instead of W times, and nothing round-trips to HBM
+between workers.
+
+Two select modes are lowered (the capability the scheduler registry flags
+with ``Scheduler.kernel_tick``):
+
+  * ``themis`` — the statistical-token weighted draw, the *same op
+    sequence* as ``token_select`` / ``core.tokens.select_job``;
+  * ``fifo``   — earliest queued arrival, over a precomputed ``[S, J, W]``
+    window of the next W ring stamps (the at-most-W pops a tick can take).
+
+ref.py is the pure-jnp oracle; the engine equivalence tests hold this
+kernel bit-identical to the legacy scan for every lowered scheduler.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import MODES
+
+
+def _themis_draw(shares, demand, u_w, real_j):
+    """One worker's weighted draw over a [BS, Jp] block — the op sequence of
+    ``token_select`` with the clip pinned to the real J (padding-exact)."""
+    dm = demand.astype(shares.dtype)
+    masked = shares * dm
+    total_m = jnp.sum(masked, axis=-1, keepdims=True)
+    probs = jnp.where(total_m > 0, masked / jnp.maximum(total_m, 1e-30), 0.0)
+    no_mass = jnp.sum(probs, axis=-1, keepdims=True) <= 0
+    ones_m = jnp.ones_like(shares) * dm
+    total_u = jnp.sum(ones_m, axis=-1, keepdims=True)
+    uniform = jnp.where(total_u > 0, ones_m / jnp.maximum(total_u, 1e-30), 0.0)
+    probs = jnp.where(no_mass, uniform, probs)
+    seg = jnp.cumsum(probs, axis=-1)
+    total = seg[:, -1]
+    idx = jnp.sum((seg <= u_w[:, None]).astype(jnp.int32), axis=-1)
+    idx = jnp.clip(idx, 0, real_j - 1)
+    idx = jnp.where(total > 0, idx, -1)
+    picked_ok = jnp.take_along_axis(
+        demand.astype(jnp.int32), jnp.maximum(idx, 0)[:, None], axis=-1)[:, 0]
+    first = jnp.argmax(demand.astype(jnp.int32), axis=-1).astype(jnp.int32)
+    return jnp.where((idx >= 0) & (picked_ok == 0), first, idx).astype(jnp.int32)
+
+
+def _tick_step_kernel(shares_ref, qcount_ref, window_ref, free_ref, u_ref,
+                      sel_ref, valid_ref, dany_ref, qout_ref, pops_ref,
+                      q_scr, p_scr, *, mode: str, real_j: int, n_workers: int):
+    shares = shares_ref[...]                         # [BS, Jp]
+    window = window_ref[...]                         # [BS, Jp, W]
+    free = free_ref[...] > 0                         # [BS, W]
+    u = u_ref[...]                                   # [BS, W]
+    q_scr[...] = qcount_ref[...]                     # queue state -> scratch
+    p_scr[...] = jnp.zeros_like(qcount_ref[...])
+    kidx = jax.lax.broadcasted_iota(jnp.int32, window.shape, 2)
+    jidx = jax.lax.broadcasted_iota(jnp.int32, shares.shape, 1)
+    for w in range(n_workers):                       # static unroll
+        qcount = q_scr[...]
+        pops = p_scr[...]
+        demand = qcount > 0
+        if mode == "themis":
+            j_sel = _themis_draw(shares, demand, u[:, w], real_j)
+        else:
+            # branchless window gather at k = pops (a one-hot min; exactly
+            # window[s, j, pops] — each k matches at most once)
+            ht = jnp.min(jnp.where(kidx == pops[:, :, None], window, jnp.inf),
+                         axis=-1)
+            ht = jnp.where(demand, ht, jnp.inf)
+            j_sel = jnp.argmin(ht, axis=-1).astype(jnp.int32)
+            j_sel = jnp.where(demand.any(axis=-1), j_sel, -1)
+        valid = free[:, w] & (j_sel >= 0)
+        j_safe = jnp.maximum(j_sel, 0)
+        onehot = ((jidx == j_safe[:, None]).astype(jnp.int32)
+                  * valid[:, None].astype(jnp.int32))
+        q_scr[...] = qcount - onehot
+        p_scr[...] = pops + onehot
+        sel_ref[:, w] = j_sel
+        valid_ref[:, w] = valid.astype(jnp.int32)
+        dany_ref[:, w] = demand.any(axis=-1).astype(jnp.int32)
+    qout_ref[...] = q_scr[...]
+    pops_ref[...] = p_scr[...]
+
+
+def tick_step_pallas(shares: jnp.ndarray, qcount: jnp.ndarray,
+                     window: jnp.ndarray, free: jnp.ndarray, u: jnp.ndarray,
+                     *, mode: str = "themis", block_servers: int = 8,
+                     interpret: bool = True):
+    """shares, qcount: [S, J]; window: [S, J, W]; free, u: [S, W].
+
+    Returns ``(sel i32[S,W], valid bool[S,W], demand_any bool[S,W],
+    qcount_out i32[S,J], pops i32[S,J])`` — see ref.py for semantics.
+    J is padded to the 128-lane width, S is blocked over the grid;
+    ``interpret=True`` runs the body on CPU (validation mode).
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown tick-step mode {mode!r}; one of {MODES}")
+    s, j = qcount.shape
+    w = u.shape[1]
+    jp = -(-j // 128) * 128
+    sp = -(-s // block_servers) * block_servers
+    shares_p = jnp.zeros((sp, jp), shares.dtype).at[:s, :j].set(shares)
+    qcount_p = jnp.zeros((sp, jp), jnp.int32).at[:s, :j].set(qcount)
+    window_p = jnp.zeros((sp, jp, w), jnp.float32).at[:s, :j].set(window)
+    free_p = jnp.zeros((sp, w), jnp.int32).at[:s].set(free.astype(jnp.int32))
+    u_p = jnp.zeros((sp, w), jnp.float32).at[:s].set(u)
+    grid = (sp // block_servers,)
+    bs = block_servers
+    sel, valid, dany, qout, pops = pl.pallas_call(
+        functools.partial(_tick_step_kernel, mode=mode, real_j=j,
+                          n_workers=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, jp), lambda i: (i, 0)),
+            pl.BlockSpec((bs, jp), lambda i: (i, 0)),
+            pl.BlockSpec((bs, jp, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bs, w), lambda i: (i, 0)),
+            pl.BlockSpec((bs, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, w), lambda i: (i, 0)),
+            pl.BlockSpec((bs, w), lambda i: (i, 0)),
+            pl.BlockSpec((bs, w), lambda i: (i, 0)),
+            pl.BlockSpec((bs, jp), lambda i: (i, 0)),
+            pl.BlockSpec((bs, jp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sp, w), jnp.int32),
+            jax.ShapeDtypeStruct((sp, w), jnp.int32),
+            jax.ShapeDtypeStruct((sp, w), jnp.int32),
+            jax.ShapeDtypeStruct((sp, jp), jnp.int32),
+            jax.ShapeDtypeStruct((sp, jp), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bs, jp), jnp.int32),   # live queue counts
+            pltpu.VMEM((bs, jp), jnp.int32),   # pops so far (ring advance)
+        ],
+        interpret=interpret,
+    )(shares_p, qcount_p, window_p, free_p, u_p)
+    return (sel[:s], valid[:s] > 0, dany[:s] > 0, qout[:s, :j],
+            pops[:s, :j])

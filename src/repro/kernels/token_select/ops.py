@@ -1,4 +1,11 @@
-"""jit'd dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+"""jit'd dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere.
+
+This is the seam :func:`repro.core.tokens.select_job` draws through: both
+implementations run the *same op sequence* (renorm -> uniform fallback ->
+segment search -> demand guard), so ``impl`` changes where the draw runs,
+never what it returns — pinned by the interpret-mode equivalence tests in
+``tests/test_kernels.py``.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,11 +15,26 @@ import jax
 from .kernel import token_select_pallas
 from .ref import token_select_ref
 
+IMPLS = ("auto", "ref", "pallas")
+
+
+def resolve_impl(impl: str) -> str:
+    """Normalize an ``impl`` request: ``auto`` means Pallas on TPU, the jnp
+    oracle elsewhere.  Unknown names fail loudly with the vocabulary."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; one of {IMPLS}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
 
 @functools.partial(jax.jit, static_argnames=("impl",))
 def token_select(shares, qcount, u, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    """All W worker draws for every server row in one fused call.
+
+    shares, qcount: [S, J]; u: [S, W] -> int32 [S, W] (-1 = idle).
+    """
+    impl = resolve_impl(impl)
     if impl == "pallas":
         return token_select_pallas(shares, qcount, u,
                                    interpret=jax.default_backend() != "tpu")

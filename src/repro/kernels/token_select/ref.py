@@ -1,5 +1,11 @@
-"""Pure-jnp oracle for the token_select kernel (same math as
-repro.core.tokens.select_job, vectorized over workers)."""
+"""Pure-jnp oracle for the token_select kernel.
+
+This is the *same op sequence* as :func:`repro.core.tokens.select_job`
+(opportunity renormalization -> uniform fallback -> segment search -> demand
+guard), vectorized over a trailing worker axis.  ``select_job`` delegates
+here through the :mod:`.ops` dispatcher, so the oracle IS the production
+draw path on CPU and the bit-identity bar for the Pallas kernel.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,18 +13,35 @@ import jax.numpy as jnp
 
 def token_select_ref(shares: jnp.ndarray, qcount: jnp.ndarray,
                      u: jnp.ndarray) -> jnp.ndarray:
-    """shares, qcount: [S, J]; u: [S, W] -> int32 [S, W] (-1 = idle)."""
-    mask = qcount > 0
-    w = jnp.where(mask, shares, 0.0)
-    total = w.sum(axis=-1, keepdims=True)
-    w = jnp.where(total > 0, w, jnp.where(mask, 1.0, 0.0))
-    cdf = jnp.cumsum(w, axis=-1)
-    tot = cdf[:, -1][:, None]
-    scaled = u * tot
-    idx = jnp.sum((cdf[:, None, :] <= scaled[:, :, None]).astype(jnp.int32), axis=-1)
+    """shares, qcount: [S, J]; u: [S, W] -> int32 [S, W] (-1 = idle).
+
+    Math (kept bit-exact with the historical ``select_job``): renormalize
+    shares over demanded jobs, fall back to uniform-over-demanded when the
+    policy gave no mass, take the job whose cumulative segment contains
+    ``u``, and guard roundoff at segment edges by snapping to the first
+    demanded slot.
+    """
+    demand = qcount > 0
+    dm = demand.astype(shares.dtype)
+    masked = shares * dm
+    total_m = masked.sum(axis=-1, keepdims=True)
+    probs = jnp.where(total_m > 0, masked / jnp.maximum(total_m, 1e-30), 0.0)
+    # Work conservation: demand with no policy mass draws uniformly.
+    no_mass = probs.sum(axis=-1, keepdims=True) <= 0
+    ones_m = jnp.ones_like(shares) * dm
+    total_u = ones_m.sum(axis=-1, keepdims=True)
+    uniform = jnp.where(total_u > 0, ones_m / jnp.maximum(total_u, 1e-30), 0.0)
+    probs = jnp.where(no_mass, uniform, probs)
+    seg = jnp.cumsum(probs, axis=-1)                     # [S, J]
+    total = seg[:, -1]                                   # [S]
+    # Branchless segment search per worker: count boundaries <= u.
+    idx = jnp.sum((seg[:, None, :] <= u[:, :, None]).astype(jnp.int32),
+                  axis=-1)                               # [S, W]
     idx = jnp.clip(idx, 0, shares.shape[-1] - 1)
-    picked_ok = jnp.take_along_axis(mask, idx, axis=-1)
-    first = jnp.argmax(mask.astype(jnp.int32), axis=-1).astype(jnp.int32)
-    idx = jnp.where(picked_ok, idx, first[:, None])
-    any_demand = mask.any(axis=-1, keepdims=True)
-    return jnp.where(any_demand, idx, -1).astype(jnp.int32)
+    idx = jnp.where(total[:, None] > 0, idx, -1)
+    # Roundoff guard: picked slot must have demand; else first demanded slot.
+    has = jnp.take_along_axis(demand.astype(jnp.int32),
+                              jnp.maximum(idx, 0), axis=-1)
+    first = jnp.argmax(demand.astype(jnp.int32), axis=-1).astype(jnp.int32)
+    idx = jnp.where((idx >= 0) & (has == 0), first[:, None], idx)
+    return idx.astype(jnp.int32)

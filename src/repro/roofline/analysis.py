@@ -73,6 +73,47 @@ def collective_bytes_from_hlo(hlo_text: str) -> dict[str, Any]:
     return {"per_kind_bytes": out, "per_kind_count": counts, "total_bytes": total}
 
 
+def tick_step_roofline(s: int, j: int, w: int, dtype_bytes: int = 4) -> dict:
+    """Analytic roofline for one fused tick-step invocation
+    (:mod:`repro.kernels.tick_step`) at geometry ``[S, J]`` × ``W`` workers.
+
+    Traffic model (HBM side, one invocation): the kernel streams the share
+    table, queue counts, and the ``[S, J, W]`` ring window in once, and the
+    selections/pops out once — the queue state itself stays resident in VMEM
+    scratch across the W draws, which is the point of the fusion:
+
+        bytes  = S·J·(3 + W)·dtype_bytes  in   (shares, qcount, window)
+               + S·W·2·dtype_bytes        in   (free, u)
+               + S·(3·W + 2·J)·dtype_bytes out (sel, valid, demand_any,
+                                                qcount', pops)
+
+    Per draw the select is a masked renorm + prefix sum + segment count over
+    J lanes (≈ 8 ops/lane incl. the fallback branch) plus the pop update
+    (≈ 4 ops/lane), so flops ≈ S·W·J·12.  At simulation geometry (J ≤ a few
+    thousand) arithmetic intensity is far below the machine balance point
+    (~240 flops/byte on v5e), so the kernel is **memory-bound** and the
+    per-tick budget is the HBM streaming time — that is the bytes/flop
+    justification behind the ``kern_tick_budget_*`` rows in BENCH_kern.json:
+    a fused tick is allowed its own traffic at HBM speed, nothing more.
+    """
+    bytes_in = s * j * (3 + w) * dtype_bytes + s * w * 2 * dtype_bytes
+    bytes_out = s * (3 * w + 2 * j) * dtype_bytes
+    bytes_total = bytes_in + bytes_out
+    flops = s * w * j * 12.0
+    memory_s = bytes_total / HBM_BW
+    compute_s = flops / PEAK_FLOPS
+    return {
+        "s": s, "j": j, "w": w,
+        "bytes": bytes_total,
+        "flops": flops,
+        "intensity_flops_per_byte": flops / bytes_total,
+        "memory_s": memory_s,
+        "compute_s": compute_s,
+        "bound": "memory" if memory_s >= compute_s else "compute",
+        "budget_us": max(memory_s, compute_s) * 1e6,
+    }
+
+
 def model_flops(cfg, shape) -> float:
     """6·N·D with N = active params (MoE counts top-k experts only)."""
     n = cfg.active_param_count()

@@ -52,6 +52,62 @@ class TestTokenSelect:
         want = token_select_ref(shares, qcount, u)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
+    # -- edge cases the engine actually produces -----------------------------
+
+    def test_all_zero_shares_with_demand(self):
+        """Zero mass + demand: the uniform fallback must pick a demanded job,
+        identically in kernel and oracle."""
+        shares = jnp.zeros((3, 8), jnp.float32)
+        qcount = jnp.asarray(
+            jax.random.randint(jax.random.PRNGKey(5), (3, 8), 0, 2))
+        u = jax.random.uniform(jax.random.PRNGKey(6), (3, 4))
+        got = token_select_pallas(shares, qcount, u)
+        want = token_select_ref(shares, qcount, u)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        dm = np.asarray(qcount) > 0
+        for s in range(3):
+            for w in range(4):
+                g = int(np.asarray(got)[s, w])
+                assert (g == -1 and not dm[s].any()) or dm[s, g]
+
+    def test_single_live_job(self):
+        """Exactly one demanded job: every draw lands on it regardless of u."""
+        shares = jnp.asarray(
+            jax.random.uniform(jax.random.PRNGKey(7), (2, 16)))
+        qcount = jnp.zeros((2, 16), jnp.int32).at[:, 11].set(3)
+        u = jax.random.uniform(jax.random.PRNGKey(8), (2, 5))
+        got = token_select_pallas(shares, qcount, u)
+        want = token_select_ref(shares, qcount, u)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert (np.asarray(got) == 11).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 4), st.integers(125, 140), st.integers(0, 10_000))
+    def test_j_straddles_lane_width(self, s, j, seed):
+        """J around the 128-lane block boundary: padding must not change the
+        draw (the kernel clips against the real J, not the padded one)."""
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        shares = jax.random.uniform(k1, (s, j))
+        qcount = jax.random.randint(k2, (s, j), 0, 2)
+        u = jax.random.uniform(k3, (s, 3))
+        got = token_select_pallas(shares, qcount, u)
+        want = token_select_ref(shares, qcount, u)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_share_dtypes(self, dtype):
+        """The share table keeps its dtype through the kernel's padding path;
+        kernel and oracle agree per dtype."""
+        key = jax.random.PRNGKey(3)
+        k1, k2, k3 = jax.random.split(key, 3)
+        shares = jax.random.uniform(k1, (4, 32)).astype(dtype)
+        qcount = jax.random.randint(k2, (4, 32), 0, 3)
+        u = jax.random.uniform(k3, (4, 8))
+        got = token_select_pallas(shares, qcount, u)
+        want = token_select_ref(shares, qcount, u)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

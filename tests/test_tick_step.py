@@ -1,0 +1,186 @@
+"""Fused tick-step kernel vs the legacy scan — bit-identity on both planes.
+
+The contract: ``EngineConfig.tick_impl`` changes *where* the worker phase
+runs, never what it computes.  For every registered scheduler the fused
+engine must reproduce the legacy scan's final state bit-for-bit — shares,
+per-job bytes, completed counts, queue state, and the PRNG key trajectory
+(stream identity) — and schedulers without kernel support must fall back
+to the scan transparently.  The op-level tests hold the Pallas kernel
+(interpret mode on CPU) to the jnp oracle under the same standard.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core.engine import (EngineConfig, make_workload, resolve_tick_impl,
+                               run)
+from repro.core.policy import Policy
+from repro.core.scheduler import available_schedulers, get_scheduler
+from repro.bb.service import BBClient, BBCluster, JobMeta
+from repro.kernels.tick_step.ops import tick_step
+from repro.kernels.tick_step.ref import MODES, tick_step_ref
+
+LOWERED = ("themis", "fifo")
+
+
+def _rand_inputs(seed, s, j, w):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    shares = jax.random.uniform(ks[0], (s, j))
+    qcount = jax.random.randint(ks[1], (s, j), 0, 4)
+    # ring stamps grow along the window axis like a real arrival ring
+    window = jnp.cumsum(jax.random.uniform(ks[2], (s, j, w)), axis=-1)
+    free = jax.random.uniform(ks[3], (s, w)) < 0.8
+    u = jax.random.uniform(ks[4], (s, w))
+    return shares, qcount, window, free, u
+
+
+class TestTickStepOp:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("s,j,w", [(1, 4, 2), (2, 16, 8), (4, 130, 8),
+                                       (8, 256, 4)])
+    def test_pallas_matches_ref(self, mode, s, j, w):
+        args = _rand_inputs(s * 1000 + j + w, s, j, w)
+        ref = tick_step_ref(*args, mode=mode)
+        pal = tick_step(*args, mode=mode, impl="pallas")
+        for name, a, b in zip(("sel", "valid", "demand_any", "qcount",
+                               "pops"), ref, pal):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{mode}/{name}")
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 5), st.integers(2, 40), st.integers(1, 8),
+           st.integers(0, 10_000))
+    def test_property_pallas_matches_ref(self, s, j, w, seed):
+        args = _rand_inputs(seed, s, j, w)
+        for mode in MODES:
+            ref = tick_step_ref(*args, mode=mode)
+            pal = tick_step(*args, mode=mode, impl="pallas")
+            for a, b in zip(ref, pal):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_pops_bounded_by_queue_and_workers(self):
+        shares, qcount, window, free, u = _rand_inputs(1, 3, 12, 6)
+        _, valid, _, qout, pops = tick_step(shares, qcount, window, free, u,
+                                            mode="themis", impl="ref")
+        assert (np.asarray(qout) >= 0).all()
+        assert (np.asarray(qout) + np.asarray(pops)
+                == np.asarray(qcount)).all()
+        assert np.asarray(pops).sum(axis=-1).max() <= 6
+
+    def test_unknown_mode_and_impl_fail_loudly(self):
+        args = _rand_inputs(0, 1, 4, 2)
+        with pytest.raises(ValueError, match="mode"):
+            tick_step(*args, mode="lifo")
+        with pytest.raises(ValueError, match="impl"):
+            tick_step(*args, impl="cuda")
+
+
+class TestResolveTickImpl:
+    def test_lowered_schedulers_honor_pallas(self):
+        for name in LOWERED:
+            cfg = EngineConfig(scheduler=name, tick_impl="pallas")
+            assert resolve_tick_impl(cfg, get_scheduler(name)) == "pallas"
+
+    def test_non_lowered_schedulers_fall_back(self):
+        for name in available_schedulers():
+            if name in LOWERED:
+                continue
+            cfg = EngineConfig(scheduler=name, tick_impl="pallas")
+            assert resolve_tick_impl(cfg, get_scheduler(name)) == "ref"
+
+    def test_ref_always_wins(self):
+        for name in available_schedulers():
+            cfg = EngineConfig(scheduler=name, tick_impl="ref")
+            assert resolve_tick_impl(cfg, get_scheduler(name)) == "ref"
+
+    def test_auto_off_tpu_is_ref(self):
+        cfg = EngineConfig(scheduler="themis", tick_impl="auto")
+        expect = "pallas" if jax.default_backend() == "tpu" else "ref"
+        assert resolve_tick_impl(cfg, get_scheduler("themis")) == expect
+
+    def test_unknown_impl_fails_loudly(self):
+        cfg = EngineConfig(scheduler="themis", tick_impl="fused")
+        with pytest.raises(ValueError, match="tick_impl"):
+            resolve_tick_impl(cfg, get_scheduler("themis"))
+
+
+def _jobs():
+    return [
+        dict(user=0, size=2, procs=40, req_mb=8, think_s=0.002),
+        dict(user=1, size=1, procs=20, req_mb=4,
+             phases=[dict(start_s=0.0, duration_s=0.1, arrival="poisson",
+                          rate_hz=300),
+                     dict(start_s=0.15, duration_s=0.2)]),
+        dict(user=2, size=1, procs=10, req_mb=16, start_s=0.05,
+             think_s=0.001),
+    ]
+
+
+def _final_states(scheduler, seconds=0.3, seed=3):
+    cfg_ref = EngineConfig(n_servers=2, max_jobs=8, n_workers=4,
+                           scheduler=scheduler,
+                           policy=Policy.parse("user-fair"),
+                           tick_impl="ref", seed=seed)
+    cfg_pal = dataclasses.replace(cfg_ref, tick_impl="pallas")
+    wl, table = make_workload(cfg_ref, _jobs())
+    return (run(cfg_ref, wl, table, seconds)["state"],
+            run(cfg_pal, wl, table, seconds)["state"])
+
+
+def _assert_states_equal(sr, sp, tag):
+    for name in sr._fields:
+        a, b = getattr(sr, name), getattr(sp, name)
+        if name == "aux":
+            for f in a._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+                    err_msg=f"{tag}: aux.{f}")
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{tag}: {name}")
+
+
+class TestEngineBitIdentity:
+    """tick_impl='pallas' == tick_impl='ref', full final state, per scheduler.
+
+    The comparison covers every EngineState leaf — bytes_bin (per-job bytes),
+    completed, qcount/head/ring, free_at, aux, AND state.key: equal final
+    keys prove the two paths consumed the PRNG stream identically."""
+
+    @pytest.mark.parametrize("scheduler", available_schedulers())
+    def test_full_state_bitwise_equal(self, scheduler):
+        sr, sp = _final_states(scheduler)
+        _assert_states_equal(sr, sp, scheduler)
+
+    def test_fused_path_actually_ran_work(self):
+        sr, _ = _final_states("themis")
+        assert int(np.asarray(sr.completed).sum()) > 0
+
+
+class TestServicePlane:
+    """The bb plane's tick_impl seam: same drain order either way."""
+
+    @pytest.mark.parametrize("scheduler", LOWERED)
+    def test_drain_identical_across_impls(self, scheduler):
+        def drained(impl):
+            bb = BBCluster(n_servers=2, scheduler=scheduler,
+                           policy="user-fair", seed=7, tick_impl=impl)
+            clients = [BBClient(bb, JobMeta(job_id=i, user=i % 2,
+                                            size=1 + i), autodrain=False)
+                       for i in range(3)]
+            for c in clients:
+                c.open(f"/j{c.job.job_id}", "w")
+            bb.drain()
+            for i in range(8):
+                for c in clients:
+                    c._req("write", f"/j{c.job.job_id}", offset=i * 64,
+                           data=b"x" * 64)
+            done = bb.drain()
+            return [(r.job.job_id, r.seqno, r.done_at) for r in done]
+
+        assert drained("ref") == drained("pallas")
