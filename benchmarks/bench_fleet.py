@@ -1,0 +1,104 @@
+"""fleet section: facility-scale geometry + the device-scaling ladder.
+
+Every other section runs paper-figure geometry (a handful of servers).  This
+one runs the engine at fleet scale — ``J`` in the thousands, ``S`` in the
+hundreds — and walks the shard ladder: the identical workload at 1, 2, 4, ...
+devices (``EngineConfig.shard_servers``), each device owning a contiguous
+server slab (:mod:`repro.core.shard`).  Sharded runs are bit-identical to
+x1 by contract (tests/test_shard.py), so the ladder is a pure cost curve.
+
+    fleet_run_us_per_tick_x{k}   wall us/tick at k devices, compile included
+                                 (gated, lower-better)
+    fleet_x{k}_vs_x1             wall-time ratio vs the 1-device run
+                                 (ungated: informational scaling shape —
+                                 on one physical CPU core a forced host
+                                 ladder adds collective overhead instead
+                                 of removing work)
+    fleet_gbps_x1                aggregate delivered GB/s at fleet geometry
+                                 (gated, higher-better; deterministic)
+
+Devices come from ``jax.device_count()`` — CI forces a 4-device host
+platform via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.  The
+ladder stops at min(device_count, S); rungs that don't divide ``S`` are
+skipped.
+
+Shrink knobs (full defaults in parentheses):
+``BENCH_FLEET_SERVERS`` (128), ``BENCH_FLEET_JOBS`` (1024),
+``BENCH_FLEET_WORKERS`` (4), ``BENCH_FLEET_SECONDS`` (0.1).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from repro.core import metrics
+
+from .common import simulate
+
+
+def _geometry() -> tuple[int, int, int, float]:
+    s = int(os.environ.get("BENCH_FLEET_SERVERS", "128"))
+    j = int(os.environ.get("BENCH_FLEET_JOBS", "1024"))
+    w = int(os.environ.get("BENCH_FLEET_WORKERS", "4"))
+    seconds = float(os.environ.get("BENCH_FLEET_SECONDS", "0.1"))
+    return s, j, w, seconds
+
+
+def _jobs(n_jobs: int, n_servers: int) -> list[dict]:
+    """A mixed fleet: 8 users, job spans of 1-4 servers, staggered starts so
+    arrivals don't all land on tick 0."""
+    jobs = []
+    for i in range(n_jobs):
+        jobs.append(dict(
+            user=i % 8,
+            size=min(1 + i % 4, n_servers),
+            procs=2 + i % 6,
+            req_mb=1 + i % 4,
+            start_s=0.002 * (i % 50),
+            think_s=0.004 + 0.001 * (i % 5),
+        ))
+    return jobs
+
+
+def ladder(n_servers: int) -> list[int]:
+    out, k = [], 1
+    while k <= min(jax.device_count(), n_servers):
+        if n_servers % k == 0:
+            out.append(k)
+        k *= 2
+    return out
+
+
+def run_fleet() -> list[tuple]:
+    s, j, w, seconds = _geometry()
+    dt = 2e-4
+    ticks = int(round(seconds / dt))
+    jobs = _jobs(j, s)
+    rows = []
+    base_us = None
+    for k in ladder(s):
+        t0 = time.time()
+        res, cfg = simulate(
+            "themis", jobs, seconds, policy="user-fair", n_servers=s,
+            max_jobs=j, n_workers=w, dt=dt, wheel=128, ring_cap=16,
+            bin_ticks=500, shard_servers=k)
+        wall_us = (time.time() - t0) * 1e6
+        per_tick = wall_us / ticks
+        rows.append((f"fleet_run_us_per_tick_x{k}", f"{per_tick:.1f}",
+                     f"{per_tick:.1f} us/tick (S={s} J={j} W={w}, "
+                     f"{k} dev, compile incl)"))
+        if base_us is None:
+            base_us = wall_us
+            agg = metrics.total_gbps(res, 0.0, seconds)
+            rows.append(("fleet_gbps_x1", "",
+                         f"{agg:.1f} GB/s aggregate (S={s} J={j})"))
+        else:
+            rows.append((f"fleet_x{k}_vs_x1", "",
+                         f"{wall_us / base_us:.2f}x wall vs 1 device"))
+    if len(ladder(s)) == 1:
+        rows.append(("fleet_ladder_truncated", "",
+                     "1 visible device; set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=N for rungs"))
+    return rows

@@ -11,6 +11,7 @@ produced it.
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig12      # one section
     PYTHONPATH=src python -m benchmarks.run fig12 --json BENCH_fig12.json
+    PYTHONPATH=src python -m benchmarks.run --list     # sections + schemas
 """
 import json
 import os
@@ -19,6 +20,7 @@ import sys
 from .bench_apps import run_fig13
 from .bench_comparison import run_fig12
 from .bench_composite import run_fig9_11
+from .bench_fleet import run_fleet
 from .bench_kernels import run_micro
 from .bench_lambda import run_fig14
 from .bench_policies import run_fig8
@@ -34,14 +36,47 @@ SECTIONS = {
     "fig12": run_fig12,
     "fig13": run_fig13,
     "fig14": run_fig14,
+    "fleet": run_fleet,
     "kern": run_kern,
     "micro": run_micro,
     "scen": run_scen,
 }
 
+#: ``--list`` schema: section -> row-name patterns it emits.  ``{...}`` marks
+#: the ladder/variant axis; trend-gate direction comes from the row name
+#: (see benchmarks/trend.py: ``_vs_``/``budget`` ungated, ``_us_``/``std``
+#: lower-better, ``gbps``/``jain``/``speedup`` higher-better).
+ROW_SCHEMAS = {
+    "fig7": ["fig7_{sched}_{n}srv_gbps", "fig7_paper_reference"],
+    "fig8": ["fig8_{policy}_{job}_gbps", "fig8_{policy}_jain"],
+    "fig9": ["fig9_{policy}_{phase}_gbps", "fig11_{policy}_drain_s"],
+    "fig12": ["fig12_{sched}_{metric}", "fig12_{sched}_vs_paper"],
+    "fig13": ["fig13_{app}_{sched}_s"],
+    "fig14": ["fig14_lambda{n}_{metric}"],
+    "fleet": ["fleet_run_us_per_tick_x{k}", "fleet_x{k}_vs_x1",
+              "fleet_gbps_x1"],
+    "kern": ["kern_tick_ref_j{J}", "kern_tick_fused_j{J}",
+             "kern_tick_speedup_j{J}", "kern_tick_budget_us_j{J}"],
+    "micro": ["micro_{op}_us"],
+    "scen": ["scen_{name}_{metric}"],
+}
+
+
+def list_sections() -> None:
+    """Print every section, its one-line purpose, and the rows it emits."""
+    for name, fn in SECTIONS.items():
+        doc = (sys.modules[fn.__module__].__doc__ or "").strip()
+        headline = doc.splitlines()[0] if doc else ""
+        print(f"{name}: {headline}")
+        for pattern in ROW_SCHEMAS.get(name, []):
+            print(f"    {pattern}")
+
 
 def main() -> None:
     argv = sys.argv[1:]
+    if "--list" in argv:
+        list_sections()
+        return
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")
@@ -70,9 +105,9 @@ def main() -> None:
     if json_path:
         doc = {
             "sections": all_rows,
-            "env": {k: os.environ[k] for k in
-                    ("BENCH_SECONDS", "BENCH_SEEDS", "JAX_PLATFORMS")
-                    if k in os.environ},
+            "env": {k: os.environ[k] for k in sorted(os.environ)
+                    if k.startswith(("BENCH_", "XLA_FLAGS"))
+                    or k == "JAX_PLATFORMS"},
         }
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=2)

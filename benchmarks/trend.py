@@ -45,8 +45,17 @@ def parse_value(derived) -> Optional[float]:
 
 def _env_key(doc: dict) -> str:
     env = doc.get("env", {})
-    return (f"s={env.get('BENCH_SECONDS', 'full')}"
-            f"/k={env.get('BENCH_SEEDS', 'full')}")
+    key = (f"s={env.get('BENCH_SECONDS', 'full')}"
+           f"/k={env.get('BENCH_SEEDS', 'full')}")
+    # section-specific shrink knobs (BENCH_FLEET_*, BENCH_KERN_ITERS, ...)
+    # change what a row measures just like BENCH_SECONDS does — fold them
+    # into the key so a shrunk CI run never shares a series with a
+    # full-geometry local run
+    extra = sorted(f"{k.removeprefix('BENCH_').lower()}={v}"
+                   for k, v in env.items()
+                   if k.startswith("BENCH_")
+                   and k not in ("BENCH_SECONDS", "BENCH_SEEDS"))
+    return key + ("/" + "/".join(extra) if extra else "")
 
 
 def _attribute(name: str, runs: list[dict]) -> dict:

@@ -43,6 +43,14 @@ Scenarios round-trip as JSON traces: ``exp.scenario(name)`` captures the
 declared jobs as a :class:`repro.scenario.Scenario` (``to_json`` /
 ``from_json`` / ``save`` / ``load``), and ``Experiment.from_scenario``
 rebuilds an identical spec — how benchmarks and tests pin named workloads.
+
+Fleet scale: any extra keyword (``**engine_kw``) flows to
+:class:`repro.core.engine.EngineConfig` verbatim, including the sharding
+knobs — ``Experiment(..., shard_servers=4)`` (or ``mesh_shape=(P, K)``)
+shards the engine's server slabs / sweep grid across devices via
+:mod:`repro.core.shard`, bit-identical to the single-device run (see
+``docs/architecture.md``).  ``serve()`` threads the same config, so both
+planes stay in spec parity.
 """
 from __future__ import annotations
 
@@ -428,6 +436,12 @@ class Experiment:
                  n_servers: int = 1, n_workers: int = 8,
                  server_bw: float = 22e9, max_jobs: Optional[int] = None,
                  seed: int = 0, **engine_kw):
+        """``policy`` is a chain string (``"group-then-user-fair"``) or a
+        parsed :class:`Policy`; ``params`` the scheduler's schema instance
+        (defaults per registry).  ``**engine_kw`` passes any further
+        :class:`EngineConfig` field through verbatim — ``dt``, ``ring_cap``,
+        ``tick_impl``, the fleet-sharding knobs ``shard_servers`` /
+        ``mesh_shape``, ... — validated when the spec compiles."""
         self.scheduler = scheduler
         self.sched = get_scheduler(scheduler)   # fail fast on unknown names
         if params is not None and type(params) is not self.sched.params_cls:
@@ -796,6 +810,12 @@ class Experiment:
         must be constant across the grid.  Each ``(point, seed)`` lane is
         bit-identical to ``Experiment(params=point).run(seconds)`` with that
         seed (pinned by ``tests/test_sweep.py``).
+
+        With ``mesh_shape=(P_dev, K_srv)`` in ``engine_kw`` the grid's
+        point axis is additionally split across the mesh's ``sweep`` axis
+        (each device runs ``P / P_dev`` whole points), orthogonal to the
+        server-slab sharding — still one compile, still bit-identical
+        (``tests/test_shard.py``).
         """
         if not self.jobs:
             raise ValueError("sweep() needs at least one add_job()")

@@ -164,7 +164,8 @@ class BBCluster:
                  n_workers: int = 8,
                  bandwidth: float = 22e9, max_jobs: int = 32,
                  lam_s: float = 0.5, seed: int = 0, stripes: int = 1,
-                 tick_impl: str = "auto"):
+                 tick_impl: str = "auto", shard_servers: int = 1,
+                 mesh_shape=None):
         self.fs = FileSystem(n_servers, default_stripes=stripes)
         self.servers = [BBServer(s, self.fs, n_workers=n_workers,
                                  bandwidth=bandwidth) for s in range(n_servers)]
@@ -173,11 +174,17 @@ class BBCluster:
         # tick_impl reaches the scheduler hooks through cfg: on this plane the
         # draws are eager pop-by-pop, so it selects the token_select impl
         # inside Scheduler.select (same vocabulary as the engine's seam).
+        # The shard knobs thread through for config parity with the engine
+        # plane (validated geometry, cross-plane Experiment specs); drain
+        # itself is eager Python and already computes on the full [S, J] aux
+        # — the global view the sharded engine all-gathers — so results never
+        # depend on them here.
         self.cfg = EngineConfig(
             n_servers=n_servers, max_jobs=max_jobs, n_workers=n_workers,
             server_bw=bandwidth, scheduler=scheduler,
             scheduler_params=scheduler_params, policy=self.policy,
-            tick_impl=tick_impl, seed=seed)
+            tick_impl=tick_impl, shard_servers=shard_servers,
+            mesh_shape=mesh_shape, seed=seed)
         self.aux = self.sched.init_aux(n_servers, max_jobs)
         self.max_jobs = max_jobs
         self.lam_s = lam_s

@@ -231,6 +231,40 @@ def adaptbf_interval(aux: AuxState, qcount, mu_s: float, server_bw: float,
                         served=jnp.zeros_like(aux.served))
 
 
+def adaptbf_cross_donate(aux: AuxState, qcount, mu_s: float, server_bw: float,
+                         donate_frac) -> AuxState:
+    """Fleet-level donor/borrower match **across servers**, run after the
+    per-server exchange of :func:`adaptbf_interval`.
+
+    A fraction ``donate_frac`` of every (server, job) bucket's remaining
+    surplus over its BSIP demand estimate is pooled globally — in the
+    sharded engine this operates on the all-gathered ``[S, J]`` aux, so the
+    pool spans device shards — and waterfilled over the global deficits
+    (smallest levelled first).  Grants enter the borrowed ledger like local
+    borrows; repayment stays with :func:`adaptbf_interval`'s per-server
+    decay, i.e. shard-local.
+
+    ``donate_frac`` may be a traced scalar (sweep leaf), so the exchange is
+    gated with ``jnp.where`` rather than Python control flow; at
+    ``donate_frac == 0`` the aux passes through **bitwise** unchanged —
+    the pre-fleet behavior, pinned by the calibrated-defaults tests.
+    """
+    pending = qcount.astype(jnp.float32)
+    tot = jnp.maximum(pending.sum(axis=1, keepdims=True), 1.0)
+    need = server_bw * mu_s * pending / tot
+    surplus = jnp.maximum(aux.bucket - need, 0.0)
+    deficit = jnp.maximum(need - aux.bucket, 0.0)
+    donatable = donate_frac * surplus
+    pool = donatable.sum()
+    grant = waterfill(deficit.reshape(-1), pool).reshape(deficit.shape)
+    take_frac = grant.sum() / jnp.maximum(pool, 1e-30)
+    on = jnp.asarray(donate_frac) > 0.0
+    return aux._replace(
+        bucket=jnp.where(on, aux.bucket - donatable * take_frac + grant,
+                         aux.bucket),
+        borrowed=jnp.where(on, aux.borrowed + grant, aux.borrowed))
+
+
 def adaptbf_select(aux: AuxState, demand: jnp.ndarray, req_bytes,
                    key) -> jnp.ndarray:
     """Admit jobs whose (possibly borrowed-into) bucket covers the request,

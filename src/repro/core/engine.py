@@ -53,12 +53,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from . import baselines
 from .global_sync import sync_segments
 from .job_table import JobTable, make_table
 from .params import SchedulerParams, stack_params
 from .policy import Policy
 from .scheduler import Scheduler, TickView, get_scheduler
+from .shard import (AXIS_SERVERS, AXIS_SWEEP, ShardSpec, resolve_shard,
+                    state_specs)
 from repro.kernels.tick_step import tick_step
 
 #: One entry is appended each time an engine scan is traced for XLA.
@@ -120,8 +125,13 @@ class EngineConfig:
     # The scheduler's own knobs (repro.core.params schema matching
     # ``scheduler``); None -> schema defaults.
     scheduler_params: Optional[SchedulerParams] = None
-    # Fabric model for multi-server scaling (calibrated to paper Fig. 7:
-    # efficiency ~ S^-0.08 => 82% at 8 servers, 68% at 128).
+    # Fabric-contention model for multi-server scaling: worker bandwidth is
+    # derated by ``eff = n_servers ** (-fabric_exponent)``, a power-law loss
+    # from cross-server fabric traffic (metadata, stripe coordination) as the
+    # fleet grows.  0.0 (the default) models an ideal fabric — every server
+    # delivers its full ``server_bw`` regardless of fleet size; the paper's
+    # Fig. 7 scaling calibrates to ~S^-0.08 (82% efficiency at 8 servers,
+    # 68% at 128).  See ``worker_bw``.
     fabric_exponent: float = 0.0
     # Worker-phase implementation: "ref" is the legacy per-worker lax.scan;
     # "pallas" routes the whole phase through the fused tick-step kernel
@@ -130,10 +140,33 @@ class EngineConfig:
     # (see Scheduler.kernel_tick) transparently fall back to "ref" — see
     # resolve_tick_impl.
     tick_impl: str = "auto"
+    # Fleet sharding (repro.core.shard): split the [S, ...] server axis into
+    # contiguous per-device slabs.  ``shard_servers=k`` is sugar for
+    # ``mesh_shape=(1, k)``; ``mesh_shape=(m, k)`` additionally shards
+    # run_batch's leading grid/seed axis over m sweep lanes.  The defaults
+    # keep the classic single-device path (no shard_map in the trace), and a
+    # sharded run is bit-identical to the unsharded one (tests/test_shard.py).
+    shard_servers: int = 1
+    mesh_shape: Optional[tuple] = None
     seed: int = 0
+
+    def __post_init__(self):
+        # Geometry must be validated here, at construction: a zero server
+        # count otherwise surfaces deep inside a trace as an opaque
+        # reshape/pow error 40 lines into make_tick.
+        for name in ("n_servers", "max_jobs", "n_workers"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, np.integer)) or v < 1:
+                raise ValueError(
+                    f"EngineConfig.{name} must be a positive int, got {v!r}")
+        resolve_shard(self)   # mesh knobs: fail loudly before any tracing
 
     @property
     def worker_bw(self) -> float:
+        """Per-worker bandwidth (bytes/s): the server's ``server_bw`` split
+        evenly over its ``n_workers``, derated by the fabric-contention
+        efficiency ``n_servers ** (-fabric_exponent)`` (1.0 at the default
+        exponent of 0 — see ``fabric_exponent``)."""
         eff = float(self.n_servers) ** (-self.fabric_exponent)
         return self.server_bw / self.n_workers * eff
 
@@ -150,12 +183,19 @@ def resolve_tick_impl(cfg: "EngineConfig", sched: Scheduler) -> str:
     the base no-op (the kernel carries no aux state through the draws), else
     the request falls back to ``ref`` transparently — a non-lowered scheduler
     never errors, it just runs the scan.  ``auto`` resolves to ``pallas``
-    only on TPU backends.
+    only on TPU backends.  A server-sharded run (``mesh_shape``/
+    ``shard_servers`` splitting the ``[S]`` axis) always runs the scan: the
+    sharded tick keeps ring buffers device-local, which the fused kernel's
+    monolithic ``[S, J, W]`` window does not — the fallback is silent, like
+    every other fallback here (no warning spam on accelerator-less rigs).
     """
     impl = cfg.tick_impl
     if impl not in TICK_IMPLS:
         raise ValueError(f"unknown tick_impl {impl!r}; one of {TICK_IMPLS}")
-    lowered = sched.kernel_tick and type(sched).charge is Scheduler.charge
+    shape = cfg.mesh_shape
+    server_shards = int(shape[-1]) if shape else int(cfg.shard_servers)
+    lowered = (sched.kernel_tick and type(sched).charge is Scheduler.charge
+               and server_shards == 1)
     if impl == "ref" or not lowered:
         return "ref"
     if impl == "pallas":
@@ -454,12 +494,23 @@ def _push_arrivals(state: EngineState, arrivals: jnp.ndarray, t_sec) -> EngineSt
     )
 
 
-def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
+def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int,
+              shard: Optional[ShardSpec] = None):
     """Build the per-tick transition ``tick(p, state, _) -> (state, None)``.
 
     ``p`` is the scheduler's resolved params pytree; its numeric leaves may
     be tracers (jit arguments, vmap lanes), so everything downstream treats
     them as arrays.  ``cfg`` remains a static closure of engine geometry.
+
+    With a server-sharding ``shard`` (``shard.n_servers > 1``) the returned
+    tick expects *slab-local* state (``[S/k, ...]`` leaves, see
+    :mod:`repro.core.shard`) and must run inside ``shard_map`` over the
+    :data:`~repro.core.shard.AXIS_SERVERS` mesh axis: each tick all-gathers
+    the small control plane (queue counters, heads, known/seg, free_at, aux
+    — O(S·J) scalars), replays the *exact* single-device op sequence on the
+    gathered arrays (same shapes, same PRNG draws, same scatter order — the
+    bit-identity contract), and writes the heavy ring/wheel slabs
+    (``O(S·J·CAP)``) strictly device-locally.
     """
     s_, j_, w_ = cfg.n_servers, cfg.max_jobs, cfg.n_workers
     cap, h_ = cfg.ring_cap, cfg.wheel
@@ -659,26 +710,216 @@ def make_tick(cfg: EngineConfig, wl: Workload, table: JobTable, n_bins: int):
                 jnp.mod(state.t, cfg.sync_ticks) == 0, do_sync, lambda s: s, state)
         return state, None
 
-    return tick
+    if shard is None or shard.n_servers == 1:
+        return tick
+
+    s_loc = s_ // shard.n_servers
+    srv_loc = jnp.arange(s_loc, dtype=jnp.int32)
+
+    def tick_sharded(p, state: EngineState, _):
+        """Slab-local tick: state leaves in SLAB_FIELDS are ``[S/k, ...]``.
+
+        Determinism: every decision below is computed on the all-gathered
+        full-``[S]`` control plane with the single-device tick's op sequence
+        — including the full-shape poisson/uniform draws and the per-worker
+        float-scatter order — so each device independently reaches the same
+        global decisions and only *applies* its own slab's rows.
+        """
+        row0 = jax.lax.axis_index(AXIS_SERVERS).astype(jnp.int32) * s_loc
+
+        def gat(x):
+            return jax.lax.all_gather(x, AXIS_SERVERS, axis=0, tiled=True)
+
+        def rows(x):
+            return jax.lax.dynamic_slice_in_dim(x, row0, s_loc, axis=0)
+
+        ctrl = sched.ctrl_overhead_s(p)
+        t = state.t
+        t_sec = t.astype(jnp.float32) * cfg.dt
+        started = (t >= wl.phase_start) & phase_real
+        phase_live = started & (t < wl.phase_end)
+        live = phase_live.any(axis=1)
+        cur = jnp.maximum(jnp.max(jnp.where(started, phase_idx, -1),
+                                  axis=1), 0)
+        take_cur = lambda a: jnp.take_along_axis(a, cur[:, None], axis=1)[:, 0]
+        req_now = take_cur(wl.phase_req)
+        think_now = take_cur(wl.phase_think)
+        recycle = live & (take_cur(wl.arrival_mode) == ARRIVAL_CLOSED)
+
+        # -- 1. arrivals: full-[S] accounting, slab-local ring writes -------
+        slot = jnp.mod(t, h_)
+        inject = ((t == wl.phase_start) & phase_real & fresh_start
+                  & (wl.arrival_mode == ARRIVAL_CLOSED)).any(axis=1)
+        if has_interval:
+            gap = jnp.mod(t - wl.phase_start,
+                          jnp.maximum(wl.arrival_every, 1))
+            inject = inject | (phase_live & (gap == 0)
+                               & (wl.arrival_mode == ARRIVAL_INTERVAL)
+                               ).any(axis=1)
+        arrivals = gat(state.wheel[:, :, slot]) + jnp.where(
+            inject[None, :], wl.procs, 0)                          # [S, J]
+        key_carry = state.key
+        if has_poisson:
+            key_carry, kp = jax.random.split(state.key)
+            lam = jnp.where(
+                phase_live & (wl.arrival_mode == ARRIVAL_POISSON),
+                wl.arrival_rate, 0.0).sum(axis=1)
+            arrivals = arrivals + jax.random.poisson(
+                kp, lam[None, :] * wl.procs).astype(jnp.int32)
+        wheel = state.wheel.at[:, :, slot].set(0)                  # local
+        qcount = gat(state.qcount)
+        head = gat(state.head)
+        known = gat(state.known)
+        # _push_arrivals on the full control plane; the arr_time write (the
+        # O(S·J·CAP) part) is masked down to this device's slab rows.
+        space = jnp.maximum(cap - qcount, 0)
+        accepted = jnp.minimum(arrivals, space)
+        idx = jnp.arange(cap, dtype=jnp.int32)[None, None, :]
+        tail = rows(head + qcount)[..., None]
+        pos = (idx - tail) % cap
+        mask = pos < rows(accepted)[..., None]
+        arr_time = jnp.where(mask, jnp.float32(t_sec), state.arr_time)
+        qcount = qcount + accepted
+        known = known | (accepted > 0)
+        issued = state.issued + accepted.sum(axis=0).astype(jnp.int32)
+        dropped = state.dropped + (arrivals - accepted).sum().astype(jnp.int32)
+
+        # -- 2. scheduler bookkeeping on the gathered control plane ---------
+        seg = gat(state.seg)
+        aux = jax.tree.map(gat, state.aux)
+        aux = sched.pre_tick(cfg, p, aux, qcount, t)
+        shares = sched.tick_shares(cfg, table, TickView(
+            qcount=qcount, known=known, seg=seg,
+            synced=state.synced, live=live))
+
+        # -- 3. workers -----------------------------------------------------
+        key, sub = jax.random.split(key_carry)
+        bytes_job = jnp.zeros((j_,), jnp.float32)
+        pops_job = jnp.zeros((j_,), jnp.int32)
+        idle_ticks = jnp.zeros((), jnp.int32)
+        free_at = gat(state.free_at)
+        # The only ring data the worker phase can touch: worker w pops at
+        # ring offset pops[s, j] <= w < W, so a W-wide window starting at
+        # head covers every head_time read this tick.  Gathering the window
+        # ([S, J, W]) instead of the ring ([S, J, CAP]) is what keeps the
+        # heavy slab local.
+        koff = jnp.arange(w_, dtype=jnp.int32)[None, None, :]
+        ring_idx = jnp.mod(rows(head)[..., None] + koff, cap)
+        window = gat(jnp.take_along_axis(arr_time, ring_idx, axis=-1))
+
+        def worker_body(carry, w):
+            (qcount, head, pops, wheel, free_at, aux, bytes_job, pops_job,
+             idle_ticks) = carry
+            kw = jax.random.fold_in(sub, w)
+            free = free_at[:, w] < t_sec + cfg.dt
+            demand = qcount > 0
+            head_time = jnp.where(
+                demand,
+                jnp.take_along_axis(
+                    window, jnp.minimum(pops, w_ - 1)[..., None],
+                    axis=-1)[..., 0],
+                jnp.inf)
+            j_sel = sched.select(cfg, p, shares, head_time, demand, aux,
+                                 req_now, kw)
+            valid = free & (j_sel >= 0)
+            j_safe = jnp.maximum(j_sel, 0)
+            onehot = jax.nn.one_hot(j_safe, j_, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
+            qcount = qcount - onehot
+            head = jnp.mod(head + onehot, cap)
+            pops = pops + onehot
+            rb = req_now[j_safe]
+            service = rb / worker_bw + wl.overhead_s[j_safe] + ctrl
+            start_t = jnp.maximum(free_at[:, w], t_sec)
+            new_free = jnp.where(valid, start_t + service, free_at[:, w])
+            free_at = free_at.at[:, w].set(new_free)
+            job_live = recycle[j_safe]
+            off = jnp.ceil((new_free - t_sec) / cfg.dt).astype(jnp.int32) + think_now[j_safe]
+            off = jnp.clip(off, 1, h_ - 1)
+            slot2 = jnp.mod(t + off, h_)
+            add = (valid & job_live).astype(jnp.int32)
+            wheel = wheel.at[srv_loc, rows(j_safe), rows(slot2)].add(rows(add))
+            add_b = jnp.where(valid, rb, 0.0)
+            bytes_job = bytes_job.at[j_safe].add(add_b)
+            pops_job = pops_job.at[j_safe].add(valid.astype(jnp.int32))
+            aux = sched.charge(cfg, p, aux, srv_idx, j_safe, add_b)
+            idle_ticks = idle_ticks + (free & ~valid & demand.any(axis=1)).sum().astype(jnp.int32)
+            return (qcount, head, pops, wheel, free_at, aux, bytes_job,
+                    pops_job, idle_ticks), None
+
+        carry = (qcount, head, jnp.zeros((s_, j_), jnp.int32), wheel,
+                 free_at, aux, bytes_job, pops_job, idle_ticks)
+        carry, _ = jax.lax.scan(worker_body, carry,
+                                jnp.arange(w_, dtype=jnp.int32))
+        (qcount, head, _pops, wheel, free_at, aux, bytes_job, pops_job,
+         idle_ticks) = carry
+
+        # -- 4. finish: replicated fold + λ-sync, slab slice-back -----------
+        b = jnp.minimum(t // cfg.bin_ticks, n_bins - 1)
+        new_t = t + 1
+        synced = state.synced
+        if sched.uses_segments and cfg.sync_ticks > 0:
+            def do_sync(args):
+                sg, sn = args
+                support = known & live[None, :]
+                return (sync_segments(cfg.policy, table, support,
+                                      n_iters=cfg.sinkhorn_iters),
+                        support.any(axis=0))
+            seg, synced = jax.lax.cond(
+                jnp.mod(new_t, cfg.sync_ticks) == 0, do_sync,
+                lambda a: a, (seg, synced))
+        state = state._replace(
+            t=new_t, key=key, qcount=rows(qcount), head=rows(head),
+            arr_time=arr_time, wheel=wheel, free_at=rows(free_at),
+            known=rows(known), seg=rows(seg), synced=synced,
+            aux=jax.tree.map(rows, aux),
+            bytes_bin=state.bytes_bin.at[:, b].add(bytes_job),
+            issued=issued, completed=state.completed + pops_job,
+            idle_worker_ticks=state.idle_worker_ticks + idle_ticks,
+            dropped=dropped)
+        return state, None
+
+    return tick_sharded
 
 
 def run(cfg: EngineConfig, wl: Workload, table: JobTable, sim_seconds: float):
     """Run the simulation; returns the final state and per-bin throughput.
 
-    ``result['gbps'][j, b]`` is job j's throughput (GB/s) in bin b.
+    Args:
+      cfg: engine geometry + scheduler selection (static for the trace).
+      wl/table: from :func:`make_workload` — the phased client population
+        and the policy-attribute job table.
+      sim_seconds: simulated horizon; ``ticks = sim_seconds / cfg.dt``.
+
+    Returns a dict: ``state`` (final :class:`EngineState`), ``gbps[J, NB]``
+    (job j's throughput in GB/s per ``bin_s``-second bin), plus the
+    ``issued``/``completed``/``dropped``/``idle_worker_ticks`` counters.
+
+    With ``cfg.mesh_shape``/``shard_servers`` set, the scan runs under
+    ``shard_map`` with each device owning a server slab (see
+    :mod:`repro.core.shard`); results are bit-identical to the single-device
+    path.  A sweep axis in ``mesh_shape`` is idle here (one run has no grid
+    axis) — lanes replicate over it.
     """
     ticks = int(round(sim_seconds / cfg.dt))
     n_bins = max(1, (ticks + cfg.bin_ticks - 1) // cfg.bin_ticks)
-    tick = make_tick(cfg, wl, table, n_bins)
+    shard = resolve_shard(cfg)
+    tick = make_tick(cfg, wl, table, n_bins, shard=shard)
     state = init_state(cfg, n_bins)
     params = get_scheduler(cfg.scheduler).params(cfg)
 
-    @jax.jit
-    def _run(p, state):
+    def _body(p, state):
         TRACE_LOG.append(cfg.scheduler)
         state, _ = jax.lax.scan(lambda s, x: tick(p, s, x), state, None,
                                 length=ticks)
         return state
+
+    if shard is None:
+        _run = jax.jit(_body)
+    else:
+        specs = state_specs(state, shard)
+        _run = jax.jit(shard_map(
+            _body, shard.mesh(), in_specs=(P(), specs), out_specs=specs,
+            check_rep=False))
 
     state = _run(params, state)
     bin_s = cfg.bin_ticks * cfg.dt
@@ -711,15 +952,25 @@ def run_batch(cfg: EngineConfig, wl: Workload, table: JobTable,
     params instances for ``cfg.scheduler`` — same schema, same ``mu_ticks``)
     arrays carry ``[P, K, ...]``: P grid points × K seeds, the paper-style
     mean + coefficient-of-variation sweep from a single compile.
+
+    Sharding (:mod:`repro.core.shard`): a ``servers`` mesh axis slabs the
+    ``[S]`` dimension exactly as in :func:`run`; a ``sweep`` mesh axis
+    additionally splits the *leading grid axis* — ``params_points`` lanes
+    when given (each device sweeps its own slice of the grid), else the
+    seeds axis — which must divide evenly.  Lanes are independent
+    simulations, so the sweep axis needs no collectives, and every lane
+    stays bit-identical to its sequential :func:`run`.
     """
     seeds = [int(normalize_seed(s)) for s in seeds]
     ticks = int(round(sim_seconds / cfg.dt))
     n_bins = max(1, (ticks + cfg.bin_ticks - 1) // cfg.bin_ticks)
-    tick = make_tick(cfg, wl, table, n_bins)
+    shard = resolve_shard(cfg)
+    tick = make_tick(cfg, wl, table, n_bins, shard=shard)
     base = init_state(cfg, n_bins)
     sched = get_scheduler(cfg.scheduler)
     if params_points is None:
         params = sched.params(cfg)
+        points = None
     else:
         points = list(params_points)
         for p in points:
@@ -729,9 +980,12 @@ def run_batch(cfg: EngineConfig, wl: Workload, table: JobTable,
                     f"for scheduler {cfg.scheduler!r}, got {type(p).__name__}")
         params = stack_params(points)
     seed_arr = jnp.asarray(seeds, dtype=jnp.uint32)
+    # The explicit index supplies the mapped-axis size even for schemas with
+    # no numeric leaves (themis/fifo), where ``params`` alone carries no
+    # axis; under a sweep-sharded mesh it is also what splits the grid.
+    point_idx = jnp.arange(len(points) if points is not None else 1)
 
-    @jax.jit
-    def _run_all(p, seed_arr):
+    def _body(p, seed_arr, point_idx, base):
         TRACE_LOG.append(cfg.scheduler)
 
         def one_seed(pp, seed):
@@ -743,14 +997,36 @@ def run_batch(cfg: EngineConfig, wl: Workload, table: JobTable,
         def per_seed(pp):
             return jax.vmap(lambda s: one_seed(pp, s))(seed_arr)
 
-        if params_points is None:
+        if points is None:
             return per_seed(p)
-        # The dummy index supplies the mapped-axis size even for schemas with
-        # no numeric leaves (themis/fifo), where ``p`` alone carries no axis.
         return jax.vmap(lambda pp, _i: per_seed(pp),
-                        in_axes=(0, 0))(p, jnp.arange(len(points)))
+                        in_axes=(0, 0))(p, point_idx)
 
-    state = _run_all(params, seed_arr)
+    if shard is None:
+        _run_all = jax.jit(_body)
+    else:
+        shard_grid = shard.n_sweep > 1
+        if shard_grid:
+            n_lanes = len(points) if points is not None else len(seeds)
+            what = "params_points" if points is not None else "seeds"
+            if n_lanes % shard.n_sweep:
+                raise ValueError(
+                    f"len({what})={n_lanes} is not divisible by the mesh's "
+                    f"sweep axis ({shard.n_sweep}); each device sweeps an "
+                    "equal slice of the grid")
+        sweep = AXIS_SWEEP if shard_grid else None
+        lead = (sweep, None) if points is not None else (sweep,)
+        grid_spec = P(sweep)
+        in_specs = ((grid_spec if points is not None else P()),
+                    (grid_spec if points is None else P()),
+                    (grid_spec if points is not None else P()),
+                    state_specs(base, shard))
+        _run_all = jax.jit(shard_map(
+            _body, shard.mesh(), in_specs=in_specs,
+            out_specs=state_specs(base, shard, lead=lead),
+            check_rep=False))
+
+    state = _run_all(params, seed_arr, point_idx, base)
     bin_s = cfg.bin_ticks * cfg.dt
     return {
         "state": state,

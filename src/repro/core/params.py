@@ -261,16 +261,28 @@ class AdaptbfParams(_BucketParams):
     throttles to 20.9/21.4 GB/s, 4.0 erodes Jain to 0.999), repay is flat on
     this workload so the gentlest decay wins the tie.  Operating point:
     21.42 GB/s sustained, Jain 0.9999.
+
+    ``donate`` enables the *fleet-level* exchange on top of the per-server
+    one: after each server matches its own donors and borrowers, a fraction
+    ``donate`` of every job's remaining surplus is pooled **across all
+    servers** and waterfilled over the global deficits
+    (:func:`repro.core.baselines.adaptbf_cross_donate`) — in a sharded
+    engine that pool spans device shards (repayment stays shard-local).
+    The default 0.0 keeps the exchange strictly per-server, bitwise
+    identical to the pre-fleet behavior.
     """
 
     burst_s: float = 2.0
     ctrl_overhead_s: float = 1e-4    # no rule engine: local bucket ops only
     repay: float = 0.1
+    donate: float = 0.0
 
     def _validate(self):
         super()._validate()
         _require((0.0 <= self.repay) & (self.repay <= 1.0),
                  f"repay must be in [0, 1], got {self.repay}")
+        _require((0.0 <= self.donate) & (self.donate <= 1.0),
+                 f"donate must be in [0, 1], got {self.donate}")
 
 
 @schema

@@ -8,18 +8,24 @@ inside either plane of the reproduction:
   * the **functional plane** (:mod:`repro.bb.service`), where the burst-buffer
     service calls the same hooks eagerly per drain round.
 
-The interface is four array-level hooks plus two bookkeeping knobs:
+The interface is six array-level hooks plus two bookkeeping knobs:
 
   ``init_aux(S, J)``            scheduler-private state (:class:`AuxState`)
-  ``pre_tick(cfg, p, aux, q, t)``  per-tick bookkeeping (refills, μ budgets)
+  ``pre_tick(cfg, p, aux, q, t)``  per-tick bookkeeping (μ budget gating)
   ``tick_shares(cfg, table, view)``  f32[S, J] selection shares for this tick
   ``select(cfg, p, shares, head_time, demand, aux, req_bytes, key)`` → i32[S]
   ``charge(cfg, p, aux, s, j, bytes)``  debit accounts after a pop
+  ``refill(cfg, p, aux, dt_s)``  continuous replenishment (token buckets)
+  ``interval_update(cfg, p, aux, q)``  μ-boundary exchange (resets, borrows)
   ``ctrl_overhead_s(p)``        fixed per-request control-path cost
 
 All hooks take plain arrays (no engine state), so one implementation serves
 both planes.  Shapes: ``S`` servers, ``J`` job slots; every per-server hook
-operates row-wise, so a plane may pass a single-row slice.
+operates row-wise, so a plane may pass a single-row slice.  Aux leaves lead
+with the ``[S]`` axis — that is the fleet-sharding slab contract
+(:mod:`repro.core.shard`): when the engine is sharded, each device stores
+its own server rows, and hooks still receive the all-gathered full-``[S]``
+view, so cross-server exchanges (AdapTBF donation) work unchanged.
 
 Each scheduler *owns its parameter schema* (``params_cls``, a frozen pytree
 dataclass from :mod:`repro.core.params`).  The resolved params object ``p``
@@ -87,6 +93,13 @@ class Scheduler:
     #: Which in-kernel select the fused tick runs for this scheduler — a name
     #: from ``repro.kernels.tick_step.ref.MODES``.
     kernel_select_mode: str = "themis"
+    #: Fleet capability: ``interval_update`` performs a *cross-server*
+    #: exchange (state moves between ``[S]`` rows, e.g. AdapTBF's global
+    #: donation pool).  Informational — every scheduler already runs
+    #: correctly sharded, because the engine hands hooks the all-gathered
+    #: full-``[S]`` aux (see repro.core.shard); the flag marks which
+    #: schedulers actually *exploit* the global view.
+    cross_shard: bool = False
     #: The frozen parameter schema this scheduler owns (repro.core.params).
     params_cls: Type[params_.SchedulerParams] = params_.SchedulerParams
 
@@ -281,17 +294,26 @@ class AdaptbfScheduler(_IntervalScheduler):
     tokens from under-demanding peers each μ — a decentralized waterfilling
     match of donor surplus to borrower deficits, with repayment decay on the
     borrowed ledger.  Its params schema shares TBF's per-job ``rate`` so
-    the two differ only in what happens to unused entitlement."""
+    the two differ only in what happens to unused entitlement.
+
+    With ``AdaptbfParams.donate > 0`` the per-server exchange is followed by
+    a *fleet-level* one: leftover surplus is pooled across all servers and
+    waterfilled over the global deficits.  Both planes — and the sharded
+    engine, whose hooks see the all-gathered ``[S, J]`` aux — run the same
+    math, which is why ``cross_shard`` is set."""
 
     params_cls = params_.AdaptbfParams
+    cross_shard = True
 
     def refill(self, cfg, p, aux, dt_s):
         rate = p.rate_eff(cfg)
         return baselines.adaptbf_refill(aux, rate, dt_s, rate * p.burst_s)
 
     def interval_update(self, cfg, p, aux, qcount):
-        return baselines.adaptbf_interval(
+        aux = baselines.adaptbf_interval(
             aux, qcount, self.mu_s(p, cfg.dt), cfg.server_bw, p.repay)
+        return baselines.adaptbf_cross_donate(
+            aux, qcount, self.mu_s(p, cfg.dt), cfg.server_bw, p.donate)
 
     def select(self, cfg, p, shares, head_time, demand, aux, req_bytes, key):
         return baselines.adaptbf_select(aux, demand, req_bytes, key)

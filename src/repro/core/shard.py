@@ -1,0 +1,155 @@
+"""Fleet-scale sharding seam: place the engine's server slabs on a device mesh.
+
+The paper's deployment target is a *fleet* of I/O nodes — hundreds of servers
+serving thousands of jobs — while a single device comfortably simulates only
+the benchmark-scale geometry.  This module maps the engine onto a 2-D device
+mesh ``('sweep', 'servers')`` (built by :func:`repro.launch.mesh.
+make_engine_mesh`, sized/validated here):
+
+  * **servers axis** — the ``[S, ...]`` server dimension of
+    :class:`repro.core.engine.EngineState` is split into contiguous slabs of
+    ``S // n_servers`` rows; each device owns its slab's queue counters, ring
+    buffers, time-wheel and scheduler aux.  The big per-server arrays
+    (``arr_time [S, J, CAP]``, ``wheel [S, J, H]``) never leave their device;
+    the *small* control plane (``qcount``, ``head``, ``known``, ``seg``,
+    ``free_at``, aux) is ``all_gather``-ed each tick so scheduling decisions
+    see the global picture — exactly the ThemisIO split of cheap global
+    metadata vs heavy local state.
+  * **sweep axis** — orthogonally, :func:`repro.core.engine.run_batch` splits
+    its leading params-grid (or seed) axis across devices: every lane is an
+    independent simulation, so this axis needs no collectives at all.
+
+Determinism contract: the sharded tick replays the single-device tick's op
+sequence on the gathered full-``[S]`` arrays (same shapes, same PRNG draws,
+same scatter accumulation order), so a sharded run is **bit-identical** to
+the unsharded one — pinned per scheduler in ``tests/test_shard.py``.
+
+Configuration enters through two :class:`repro.core.engine.EngineConfig`
+knobs:
+
+  * ``shard_servers=k`` — sugar for a ``(1, k)`` mesh (server slabs only);
+  * ``mesh_shape=(m, k)`` — the full 2-D mesh: ``m`` sweep lanes × ``k``
+    server slabs (``m * k`` devices).  A 1-tuple ``(k,)`` means ``(1, k)``.
+
+:func:`resolve_shard` turns those knobs into a :class:`ShardSpec` (or ``None``
+for the classic single-device path — sharding machinery entirely out of the
+trace).  On CPU test rigs, devices are conjured with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set **before** the
+first jax import).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_engine_mesh
+
+#: Mesh axis names — ``sweep`` maps independent grid/seed lanes, ``servers``
+#: maps contiguous server slabs (the only axis collectives run over).
+AXIS_SWEEP = "sweep"
+AXIS_SERVERS = "servers"
+
+#: EngineState fields stored as per-device server slabs (leading axis ``S``
+#: split over :data:`AXIS_SERVERS`).  Everything else — the tick counter,
+#: PRNG key, per-job counters, throughput bins — is replicated control-plane
+#: state: cheap, and identical on every shard by construction.
+SLAB_FIELDS = frozenset({
+    "qcount", "head", "arr_time", "wheel", "free_at", "known", "seg", "aux"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Resolved mesh geometry for one engine run.
+
+    ``n_sweep`` × ``n_servers`` devices; ``n_servers`` divides the engine's
+    ``S`` (validated by :func:`resolve_shard`).  ``slab(S)`` is the per-device
+    server-slab height.
+    """
+
+    n_sweep: int = 1
+    n_servers: int = 1
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_sweep * self.n_servers
+
+    def slab(self, n_servers_total: int) -> int:
+        """Rows of the ``[S, ...]`` state each device owns."""
+        return n_servers_total // self.n_servers
+
+    def mesh(self):
+        """Build the ``('sweep', 'servers')`` mesh over the first
+        ``n_devices`` available devices."""
+        return make_engine_mesh(self.n_sweep, self.n_servers)
+
+
+def resolve_shard(cfg) -> Optional[ShardSpec]:
+    """Resolve ``EngineConfig.mesh_shape`` / ``shard_servers`` into a
+    :class:`ShardSpec`, or ``None`` for the classic single-device path.
+
+    Validation happens here, at config time, with actionable messages:
+    conflicting knobs, a server count the mesh cannot split evenly, or more
+    mesh slots than visible devices (the error names the ``XLA_FLAGS`` escape
+    hatch used by the CPU test rigs) all raise ``ValueError`` before any
+    tracing starts.
+    """
+    shape = cfg.mesh_shape
+    shard_servers = int(getattr(cfg, "shard_servers", 1))
+    if shard_servers < 1:
+        raise ValueError(f"shard_servers must be >= 1, got {shard_servers}")
+    if shape is None:
+        shape = (1, shard_servers)
+    else:
+        shape = tuple(int(x) for x in shape)
+        if len(shape) == 1:
+            shape = (1, shape[0])
+        if len(shape) != 2:
+            raise ValueError(
+                f"mesh_shape must be (sweep, servers) or (servers,), got "
+                f"{cfg.mesh_shape!r}")
+        if shard_servers != 1 and shard_servers != shape[1]:
+            raise ValueError(
+                f"shard_servers={shard_servers} conflicts with "
+                f"mesh_shape={cfg.mesh_shape!r} (servers axis {shape[1]}); "
+                "set one or make them agree")
+    n_sweep, n_srv = shape
+    if n_sweep < 1 or n_srv < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {shape}")
+    if cfg.n_servers % n_srv:
+        raise ValueError(
+            f"n_servers={cfg.n_servers} is not divisible by the mesh's "
+            f"servers axis ({n_srv}); each device owns an equal slab")
+    if n_sweep == 1 and n_srv == 1:
+        return None
+    spec = ShardSpec(n_sweep=n_sweep, n_servers=n_srv)
+    avail = len(jax.devices())
+    if avail < spec.n_devices:
+        raise ValueError(
+            f"mesh_shape {shape} needs {spec.n_devices} devices but only "
+            f"{avail} are visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{spec.n_devices} before the first jax import")
+    return spec
+
+
+def state_specs(state, spec: ShardSpec, lead: tuple = ()):
+    """PartitionSpec pytree (same treedef prefix as ``EngineState``) for a
+    sharded run.
+
+    ``state`` is any EngineState instance (a template — only field names are
+    used).  ``lead`` prepends axes for batched leaves: ``()`` for
+    :func:`~repro.core.engine.run`; ``(AXIS_SWEEP,)`` when ``run_batch``
+    shards its leading grid/seed axis; ``(None,)`` when that axis stays on
+    one device.  Slab fields get their server axis mapped to
+    :data:`AXIS_SERVERS` (``aux`` uses one spec as a pytree prefix — every
+    aux leaf leads with ``S``); the rest replicate.
+    """
+    srv = AXIS_SERVERS if spec.n_servers > 1 else None
+    slab = P(*lead, srv)
+    repl = P(*lead)
+    return type(state)(**{
+        name: (slab if name in SLAB_FIELDS else repl)
+        for name in state._fields})

@@ -16,3 +16,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for multi-device CPU tests (XLA_FLAGS device count >= 4)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_engine_mesh(n_sweep: int = 1, n_servers: int = 1):
+    """Engine fleet mesh: ``(sweep, servers)`` — independent grid/seed lanes
+    × contiguous server slabs (see :mod:`repro.core.shard`).  Sized and
+    validated by ``repro.core.shard.resolve_shard``; on CPU rigs the devices
+    come from ``XLA_FLAGS=--xla_force_host_platform_device_count``."""
+    return jax.make_mesh((n_sweep, n_servers), ("sweep", "servers"))

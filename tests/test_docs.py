@@ -1,0 +1,58 @@
+"""Docs stay true: tools/check_docs.py wired into tier-1.
+
+The link check is cheap and runs in the quick lane; executing the
+architecture page's fenced python blocks compiles real engine runs, so it
+is slow-marked (the docs CI lane also runs it on every push).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOL = os.path.join(REPO, "tools", "check_docs.py")
+
+
+def _run(*args, env_extra=None):
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env.update(env_extra or {})
+    return subprocess.run([sys.executable, TOOL, *args],
+                          capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_docs_pages_exist():
+    for page in ("architecture.md", "schedulers.md", "benchmarks.md",
+                 "scenarios.md"):
+        assert os.path.exists(os.path.join(REPO, "docs", page)), page
+
+
+def test_readme_links_every_docs_page():
+    readme = open(os.path.join(REPO, "README.md")).read()
+    for page in ("architecture", "schedulers", "benchmarks", "scenarios"):
+        assert f"docs/{page}.md" in readme, f"README must link docs/{page}.md"
+
+
+def test_relative_links_resolve():
+    out = _run("--links-only")
+    assert out.returncode == 0, out.stderr
+
+
+def test_anchor_slugification():
+    """The checker's anchor rules must match GitHub's, or valid cross-page
+    fragment links would be flagged (or broken ones missed)."""
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import check_docs
+        assert check_docs.anchors("## The Fleet-Sharding Path") == \
+            {"the-fleet-sharding-path"}
+        assert check_docs.anchors("# Params schemas") == {"params-schemas"}
+    finally:
+        sys.path.pop(0)
+
+
+@pytest.mark.slow
+def test_architecture_blocks_execute():
+    out = _run("--run-blocks", env_extra={"EXAMPLE_SECONDS": "2"})
+    assert out.returncode == 0, out.stderr + out.stdout
+    assert "blocks ran" in out.stdout

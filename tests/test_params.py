@@ -49,7 +49,7 @@ class TestRegistrySchemas:
         or params hashes would drag an inert value along."""
         fields = {f.name for f in dataclasses.fields(AdaptbfParams)}
         assert "headroom" not in fields
-        assert {"rate", "burst_s", "repay", "mu_ticks",
+        assert {"rate", "burst_s", "repay", "donate", "mu_ticks",
                 "ctrl_overhead_s"} <= fields
 
 
@@ -97,7 +97,7 @@ class TestSchemaDefaultPins:
     def test_adaptbf_defaults(self):
         """benchmarks/calibrate.py operating point (12 s × 4 seeds)."""
         assert AdaptbfParams() == AdaptbfParams(
-            mu_ticks=500, rate=0.0, burst_s=2.0, repay=0.1,
+            mu_ticks=500, rate=0.0, burst_s=2.0, repay=0.1, donate=0.0,
             ctrl_overhead_s=1e-4)
 
     def test_plan_defaults(self):
@@ -119,6 +119,10 @@ class TestValidation:
             TbfParams(headroom=-0.1)
         with pytest.raises(ValueError, match="repay"):
             AdaptbfParams(repay=2.0)
+        with pytest.raises(ValueError, match="donate"):
+            AdaptbfParams(donate=1.5)
+        with pytest.raises(ValueError, match="donate"):
+            AdaptbfParams(donate=-0.1)
         with pytest.raises(ValueError, match="ema_alpha"):
             PlanParams(ema_alpha=0.0)
         with pytest.raises(ValueError, match="mu_ticks"):

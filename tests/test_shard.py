@@ -1,0 +1,242 @@
+"""Fleet sharding (repro.core.shard): spec resolution, config validation,
+and the bit-identity contract — a shard_map-sharded run must reproduce the
+single-device run's final state bit-for-bit, per scheduler, on both axes
+(server slabs and the sweep grid).
+
+Multi-device cases run in subprocesses (XLA_FLAGS device-count must be set
+before jax initializes; the main test process keeps 1 device), mirroring
+tests/test_distributed.py.  The child writes "OK" per check and any Python
+warning fails the run — the accelerator-less fallback must be silent.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.engine import EngineConfig, resolve_tick_impl
+from repro.core.scheduler import available_schedulers, get_scheduler
+from repro.core.shard import ShardSpec, resolve_shard, state_specs
+
+QUICK = ("themis", "adaptbf")   # one segment-sync + one interval/cross-shard
+
+
+def run_multidevice(code: str, n_devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-W", "error::UserWarning", "-c",
+                          textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class TestResolveShard:
+    def test_default_is_unsharded(self):
+        assert resolve_shard(EngineConfig()) is None
+
+    def test_shard_servers_sugar(self):
+        # resolution logic only — device availability is checked separately,
+        # so build the spec the same way resolve_shard would
+        spec = ShardSpec(n_sweep=1, n_servers=2)
+        assert spec.n_devices == 2
+        assert spec.slab(8) == 4
+
+    def test_mesh_shape_one_tuple_means_servers(self):
+        with pytest.raises(ValueError, match="devices"):
+            # 1 visible device: the error must name the XLA_FLAGS escape hatch
+            EngineConfig(n_servers=4, mesh_shape=(4,))
+
+    def test_error_names_xla_flags(self):
+        with pytest.raises(ValueError, match="xla_force_host_platform"):
+            EngineConfig(n_servers=4, shard_servers=4)
+
+    def test_indivisible_servers_rejected(self):
+        with pytest.raises(ValueError, match="divisible"):
+            EngineConfig(n_servers=3, shard_servers=2)
+
+    def test_conflicting_knobs_rejected(self):
+        with pytest.raises(ValueError, match="conflicts"):
+            EngineConfig(n_servers=4, shard_servers=2, mesh_shape=(1, 4))
+
+    def test_bad_mesh_rank_rejected(self):
+        with pytest.raises(ValueError, match="mesh_shape"):
+            EngineConfig(mesh_shape=(2, 2, 2))
+
+    def test_state_specs_slab_vs_replicated(self):
+        from repro.core.engine import init_state
+        st = init_state(EngineConfig(n_servers=4), n_bins=1)
+        specs = state_specs(st, ShardSpec(n_sweep=1, n_servers=2))
+        assert specs.qcount == ("servers",)
+        assert specs.arr_time == ("servers",)
+        assert tuple(specs.t) == ()
+        assert tuple(specs.bytes_bin) == ()
+        specs2 = state_specs(st, ShardSpec(n_sweep=2, n_servers=2),
+                             lead=("sweep", None))
+        assert specs2.qcount == ("sweep", None, "servers")
+        assert specs2.completed == ("sweep", None)
+
+
+class TestConfigValidation:
+    """The fabric/geometry satellite: n_servers=0 used to die deep inside a
+    trace; now every bad geometry fails at construction with its name."""
+
+    @pytest.mark.parametrize("field", ["n_servers", "max_jobs", "n_workers"])
+    def test_zero_geometry_fails_at_config_time(self, field):
+        with pytest.raises(ValueError, match=field):
+            EngineConfig(**{field: 0})
+
+    def test_negative_and_non_int_fail(self):
+        with pytest.raises(ValueError, match="n_servers"):
+            EngineConfig(n_servers=-1)
+        with pytest.raises(ValueError, match="n_servers"):
+            EngineConfig(n_servers=2.0)
+
+    def test_worker_bw_ideal_fabric_is_even_split(self):
+        cfg = EngineConfig(n_servers=8, n_workers=4, server_bw=20e9)
+        assert cfg.worker_bw == pytest.approx(5e9)
+
+    def test_worker_bw_fabric_derate(self):
+        cfg = EngineConfig(n_servers=8, n_workers=4, server_bw=20e9,
+                           fabric_exponent=0.08)
+        assert cfg.worker_bw == pytest.approx(5e9 * 8 ** -0.08)
+
+
+class TestMixedDeviceSafety:
+    """resolve_tick_impl on accelerator-less rigs: sharding forces the scan,
+    silently — no warning spam, no error (the satellite contract)."""
+
+    def test_sharded_config_forces_ref(self, recwarn):
+        for name in available_schedulers():
+            cfg = EngineConfig.__new__(EngineConfig)
+            object.__setattr__(cfg, "tick_impl", "pallas")
+            object.__setattr__(cfg, "mesh_shape", (1, 2))
+            object.__setattr__(cfg, "shard_servers", 1)
+            object.__setattr__(cfg, "scheduler", name)
+            assert resolve_tick_impl(cfg, get_scheduler(name)) == "ref"
+        assert len(recwarn) == 0
+
+    def test_unsharded_resolution_unchanged(self):
+        cfg = EngineConfig(scheduler="themis", tick_impl="pallas")
+        assert resolve_tick_impl(cfg, get_scheduler("themis")) == "pallas"
+
+
+_BIT_IDENTITY = """
+    import dataclasses
+    import numpy as np
+    from repro.core.engine import EngineConfig, make_workload, run, run_batch
+    from repro.core.policy import Policy
+
+    SCHED = {scheduler!r}
+    jobs = [dict(user=0, size=2, procs=40, req_mb=8, think_s=0.002),
+            dict(user=1, size=1, procs=20, req_mb=4,
+                 phases=[dict(start_s=0.0, duration_s=0.08,
+                              arrival="poisson", rate_hz=300),
+                         dict(start_s=0.1, duration_s=0.1)]),
+            dict(user=2, size=1, procs=10, req_mb=16, start_s=0.04,
+                 think_s=0.001)]
+
+    def assert_states_equal(a, b, tag):
+        for name in a._fields:
+            x, y = getattr(a, name), getattr(b, name)
+            if name == "aux":
+                for f in x._fields:
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(x, f)), np.asarray(getattr(y, f)),
+                        err_msg=tag + ": aux." + f)
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y), err_msg=tag + ": " + name)
+
+    cfg = EngineConfig(n_servers=4, max_jobs=8, n_workers=4, scheduler=SCHED,
+                       policy=Policy.parse("user-fair"), seed=3)
+    wl, table = make_workload(cfg, jobs)
+
+    r1 = run(cfg, wl, table, 0.2)
+    r4 = run(dataclasses.replace(cfg, shard_servers=4), wl, table, 0.2)
+    assert_states_equal(r1["state"], r4["state"], SCHED + "/run")
+    assert int(np.asarray(r1["state"].completed).sum()) > 0
+    print("OK run")
+
+    b1 = run_batch(cfg, wl, table, 0.2, seeds=[1, 2, 3, 4])
+    b4 = run_batch(dataclasses.replace(cfg, mesh_shape=(2, 2)), wl, table,
+                   0.2, seeds=[1, 2, 3, 4])
+    assert_states_equal(b1["state"], b4["state"], SCHED + "/run_batch")
+    print("OK run_batch")
+"""
+
+_SWEEP_IDENTITY = """
+    import numpy as np
+    from repro.api import Experiment
+    from repro.core.params import AdaptbfParams
+
+    def build(**kw):
+        ex = Experiment("user-fair", "adaptbf", n_servers=4, n_workers=4,
+                        seed=5, **kw)
+        ex.add_job(user=0, procs=30, req_mb=8, think_s=0.001)
+        ex.add_job(user=1, procs=12, req_mb=4, think_s=0.004)
+        return ex
+
+    # burst_s=0.02 makes the token bucket bind so grid points truly differ
+    grid = dict(burst_s=[0.02, 2.0], donate=[0.0, 0.5])
+    s1 = build().sweep(grid, 0.2, seeds=(1, 2))
+    s4 = build(mesh_shape=(2, 2)).sweep(grid, 0.2, seeds=(1, 2))
+    np.testing.assert_array_equal(s1.gbps, s4.gbps)
+    np.testing.assert_array_equal(s1.issued, s4.issued)
+    np.testing.assert_array_equal(s1.completed, s4.completed)
+    assert not np.array_equal(s1.point_result(0).gbps,
+                              s1.point_result(3).gbps)
+    print("OK sweep")
+"""
+
+_SERVICE_PLANE = """
+    from repro.bb.service import BBClient, BBCluster, JobMeta
+
+    def drained(**kw):
+        bb = BBCluster(n_servers=2, scheduler="adaptbf", policy="user-fair",
+                       seed=7, **kw)
+        clients = [BBClient(bb, JobMeta(job_id=i, user=i % 2, size=1 + i),
+                            autodrain=False) for i in range(3)]
+        for c in clients:
+            c.open("/j%d" % c.job.job_id, "w")
+        bb.drain()
+        for i in range(6):
+            for c in clients:
+                c._req("write", "/j%d" % c.job.job_id, offset=i * 64,
+                       data=b"x" * 64)
+        done = bb.drain()
+        return [(r.job.job_id, r.seqno, r.done_at) for r in done]
+
+    assert drained() == drained(shard_servers=2)
+    print("OK service")
+"""
+
+
+class TestShardedBitIdentity:
+    """Forced 4-device host mesh: sharded run/run_batch/sweep == unsharded,
+    full final EngineState (incl. aux + PRNG key trajectory), per scheduler.
+    The child runs with ``-W error::UserWarning`` — fallback warning spam is
+    a failure, not noise."""
+
+    @pytest.mark.parametrize("scheduler", QUICK)
+    def test_quick_schedulers(self, scheduler):
+        out = run_multidevice(_BIT_IDENTITY.format(scheduler=scheduler))
+        assert out.count("OK") == 2
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("scheduler",
+                             [s for s in available_schedulers()
+                              if s not in QUICK])
+    def test_remaining_schedulers(self, scheduler):
+        out = run_multidevice(_BIT_IDENTITY.format(scheduler=scheduler))
+        assert out.count("OK") == 2
+
+    def test_sweep_grid_sharded(self):
+        assert "OK sweep" in run_multidevice(_SWEEP_IDENTITY)
+
+    def test_service_plane_ignores_shard_knobs(self):
+        assert "OK service" in run_multidevice(_SERVICE_PLANE)

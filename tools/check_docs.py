@@ -1,0 +1,102 @@
+"""Docs health check: relative links/anchors + executable quickstart blocks.
+
+Two independent checks, both offline:
+
+1. **Links** (``--links-only`` to run just this): every markdown link in
+   README.md and docs/*.md whose target is not an external URL must resolve
+   to a file in the repo, and a ``#fragment`` must match a heading anchor in
+   the target file (GitHub slugification: lowercase, punctuation stripped,
+   spaces to hyphens).
+
+2. **Blocks** (``--run-blocks`` to run just this): the fenced ``python``
+   blocks in docs/architecture.md execute top-to-bottom in one shared
+   namespace — the page promises they are live, this enforces it.  Shrink
+   the simulated horizons with ``EXAMPLE_SECONDS`` (CI uses 2).
+
+Exit status is the number of failures (0 = healthy).  No network access.
+
+    python tools/check_docs.py                  # both checks
+    PYTHONPATH=src EXAMPLE_SECONDS=2 python tools/check_docs.py --run-blocks
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+BLOCK_PAGES = [REPO / "docs" / "architecture.md"]
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```python\n(.*?)^```", re.MULTILINE | re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def anchors(md_text: str) -> set:
+    """GitHub-style heading anchors: lowercase, drop everything but
+    word chars/spaces/hyphens, spaces become hyphens."""
+    out = set()
+    for h in HEADING_RE.findall(md_text):
+        h = re.sub(r"`([^`]*)`", r"\1", h)          # code spans keep text
+        h = re.sub(r"[^\w\- ]", "", h.strip().lower())
+        out.add(h.replace(" ", "-"))
+    return out
+
+
+def check_links() -> list:
+    errors = []
+    for page in DOC_FILES:
+        text = page.read_text()
+        # links inside code fences are syntax examples, not references
+        prose = re.sub(r"^```.*?^```", "", text, flags=re.MULTILINE | re.DOTALL)
+        for target in LINK_RE.findall(prose):
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = (page.parent / path_part).resolve() if path_part else page
+            rel = page.relative_to(REPO)
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if frag not in anchors(dest.read_text()):
+                    errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def run_blocks() -> list:
+    errors = []
+    for page in BLOCK_PAGES:
+        ns: dict = {"__name__": "__docs__"}
+        for i, block in enumerate(FENCE_RE.findall(page.read_text()), 1):
+            label = f"{page.relative_to(REPO)} python block {i}"
+            try:
+                exec(compile(block, label, "exec"), ns)   # noqa: S102
+            except Exception as e:  # noqa: BLE001 - report, keep checking pages
+                errors.append(f"{label}: {type(e).__name__}: {e}")
+                break   # later blocks depend on this namespace
+        else:
+            print(f"# {page.relative_to(REPO)}: "
+                  f"{len(FENCE_RE.findall(page.read_text()))} blocks ran")
+    return errors
+
+
+def main(argv) -> int:
+    do_links = "--run-blocks" not in argv
+    do_blocks = "--links-only" not in argv
+    errors = []
+    if do_links:
+        errors += check_links()
+    if do_blocks:
+        errors += run_blocks()
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    if not errors:
+        print("# docs healthy")
+    return len(errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
