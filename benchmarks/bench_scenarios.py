@@ -14,10 +14,17 @@ not express before the Scenario API:
 ``*_gbps`` rows feed the ``benchmarks/trend.py`` regression gate
 (higher-is-better); ``*_vs_*`` ratio rows are tracked but ungated.
 ``BENCH_SECONDS`` shrinks the scenario for CI smoke.
+
+The :func:`repro.scenario.presets` library additionally gets one aggregate
+row per preset (``scen_preset_{name}_gbps``) so every pinned library
+scenario has a trend line — a preset edit that tanks throughput trips the
+gate, not just the two hand-written cases above.
 """
 from __future__ import annotations
 
 import time
+
+from repro.scenario import presets
 
 from .common import bench_seconds, simulate
 
@@ -82,4 +89,16 @@ def run_scen() -> list[tuple]:
     rows.append(("scen_ckpt_fifo_gbps", f"{us:.0f}", f"{app_ff:.2f}"))
     rows.append(("scen_ckpt_themis_vs_fifo", f"{us:.0f}",
                  f"{app_th / max(app_ff, 1e-9):.2f}x"))
+
+    # -- preset library: one aggregate trend line per pinned scenario ------
+    # Presets pin their shape at PRESET_SECONDS; a BENCH_SECONDS-shrunk t
+    # simply truncates the replay window, which the env key in the trend
+    # gate already keeps in its own series.
+    for name, scn in presets().items():
+        t0 = time.time()
+        res, _ = simulate("themis", scn.jobs, t, policy="job-fair")
+        us = (time.time() - t0) * 1e6
+        total = res.mean_gbps(None, 0.05 * t, t)
+        rows.append((f"scen_preset_{name.replace('-', '_')}_gbps",
+                     f"{us:.0f}", f"{total:.2f} ({scn.n_jobs} jobs)"))
     return rows

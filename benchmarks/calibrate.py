@@ -31,6 +31,15 @@ defaults, so a recalibration is an explicit decision, not silent rot.
 
 ``BENCH_SECONDS`` / ``BENCH_SEEDS`` shrink the workload exactly like the
 other benchmarks (the shipped defaults were chosen at 12 s × 4 seeds).
+
+With ``--workspace DIR`` the sweeps become **resumable campaigns**
+(``calib-<scheduler>``) in a :mod:`repro.workspace` store: already-recorded
+grid points (and the plan solo baseline) are reused bit-identically, only
+missing ones are computed.  ``--chunk N`` bounds how much work one
+interrupt can lose; ``--max-chunks M`` stops after M chunks with exit code
+3 (the CI smoke interrupts itself this way, then resumes) — re-running the
+same command picks up exactly where it stopped, and ``--check --workspace``
+against a completed campaign costs no sweeping at all.
 """
 import argparse
 import json
@@ -40,6 +49,8 @@ import numpy as np
 
 from repro.api import Experiment
 from repro.core import AdaptbfParams, PlanParams
+from repro.workspace import CampaignInterrupted, WorkspaceStore
+from repro.workspace.campaign import run_sweep
 
 from .bench_comparison import make_jobs
 from .common import bench_seconds, bench_seeds, emit
@@ -64,9 +75,24 @@ def _experiment(scheduler: str, seconds: float) -> Experiment:
             .add_jobs(make_jobs(seconds)))
 
 
-def calibrate_adaptbf(seconds: float, seeds) -> tuple[list, dict]:
+def _sweep(exp, grid, seconds, seeds, ws):
+    """Plain one-compile sweep, or a resumable workspace campaign when
+    ``--workspace`` is set (campaign name ``calib-<scheduler>``)."""
+    if ws is None or ws.get("store") is None:
+        return exp.sweep(grid, seconds, seeds=seeds)
+    sw, report = run_sweep(
+        exp, grid, seconds, seeds=seeds, store=ws["store"],
+        campaign=f"calib-{exp.scheduler}", chunk=ws.get("chunk"),
+        max_chunks=ws.get("max_chunks"))
+    print(f"# calib-{exp.scheduler}: {report['reused']} reused, "
+          f"{report['computed']} computed "
+          f"({report['io_writes']} writes)", file=sys.stderr)
+    return sw
+
+
+def calibrate_adaptbf(seconds: float, seeds, ws=None) -> tuple[list, dict]:
     exp = _experiment("adaptbf", seconds)
-    sw = exp.sweep(ADAPTBF_GRID, seconds, seeds=seeds)
+    sw = _sweep(exp, ADAPTBF_GRID, seconds, seeds, ws)
     w0, w1 = seconds / 3, 2 * seconds / 3      # both-jobs-active window
     thr_m, thr_c = sw.mean_gbps(None, w0, w1)
     jain_m, _ = sw.jain_fairness(w0, w1)
@@ -94,10 +120,12 @@ def calibrate_adaptbf(seconds: float, seeds) -> tuple[list, dict]:
     return rows, report
 
 
-def calibrate_plan(seconds: float, seeds) -> tuple[list, dict]:
+def calibrate_plan(seconds: float, seeds, ws=None) -> tuple[list, dict]:
     exp = _experiment("plan", seconds)
-    solo = exp.solo(1, seconds)                # the short job, uncontended
-    sw = exp.sweep(PLAN_GRID, seconds, seeds=seeds)
+    store = ws.get("store") if ws else None
+    solo = exp.solo(1, seconds, workspace=store,
+                    name="calib-plan-solo")    # the short job, uncontended
+    sw = _sweep(exp, PLAN_GRID, seconds, seeds, ws)
     w0, w1 = 0.30 * seconds, 0.73 * seconds    # the short job's window
     sd_m, _ = sw.slowdown(solo, job=1, t0=w0, t1=w1)
     jain_m, _ = sw.jain_fairness(w0, w1)
@@ -140,9 +168,24 @@ def main(argv=None) -> int:
                     help="exit 1 if the argbest drifts off the shipped defaults")
     ap.add_argument("--json", dest="json_path",
                     help="write per-point reports to this path")
+    ap.add_argument("--workspace", metavar="DIR",
+                    help="record/reuse grid points in this workspace store "
+                         "(campaigns named calib-<scheduler>)")
+    ap.add_argument("--chunk", type=int, default=None, metavar="N",
+                    help="compute missing points N per compile so an "
+                         "interrupt loses at most one chunk")
+    ap.add_argument("--max-chunks", type=int, default=None, metavar="M",
+                    help="stop after M chunks with exit code 3 (resume by "
+                         "re-running the same command)")
     args = ap.parse_args(argv)
     want = args.schedulers or list(SECTIONS)
     check, json_path = args.check, args.json_path
+    ws = None
+    if args.workspace:
+        ws = {"store": WorkspaceStore(args.workspace),
+              "chunk": args.chunk, "max_chunks": args.max_chunks}
+    elif args.chunk is not None or args.max_chunks is not None:
+        ap.error("--chunk/--max-chunks need --workspace")
     seconds, seeds = bench_seconds(12.0), bench_seeds(tuple(range(4)))
     if check and (seconds, len(seeds)) != (12.0, 4):
         # The shipped defaults were chosen at 12 s x 4 seeds; an env-shrunk
@@ -155,7 +198,12 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     reports, drift = {}, []
     for name in want:
-        rows, report = SECTIONS[name](seconds, seeds)
+        try:
+            rows, report = SECTIONS[name](seconds, seeds, ws)
+        except CampaignInterrupted as e:
+            print(f"INTERRUPTED {e} (workspace {args.workspace})",
+                  file=sys.stderr)
+            return 3
         emit(rows)
         reports[name] = report
         if check:

@@ -42,6 +42,15 @@ def bench_seeds(default=DEFAULT_SEEDS) -> tuple:
     return tuple(range(n)) if n > 0 else tuple(default)
 
 
+def bench_env() -> dict:
+    """The environment block archived in every ``BENCH_*.json`` artifact:
+    the ``BENCH_*`` shrink knobs plus the JAX/XLA platform flags — what
+    ``benchmarks/trend.py`` folds into each trend series' env key."""
+    return {k: os.environ[k] for k in sorted(os.environ)
+            if k.startswith(("BENCH_", "XLA_FLAGS"))
+            or k == "JAX_PLATFORMS"}
+
+
 def experiment(scheduler, jobs, *, policy="job-fair", n_servers=1,
                **cfg_kw) -> Experiment:
     """Build the facade spec a benchmark variant runs on.  ``cfg_kw`` mixes

@@ -12,9 +12,15 @@ produced it.
     PYTHONPATH=src python -m benchmarks.run fig12      # one section
     PYTHONPATH=src python -m benchmarks.run fig12 --json BENCH_fig12.json
     PYTHONPATH=src python -m benchmarks.run --list     # sections + schemas
+
+``--workspace DIR`` additionally records every row as a ``bench`` record in
+a :mod:`repro.workspace` store (keyed on section/row + attributed
+scheduler/params_hash + the ``BENCH_*`` env fingerprint, one buffered
+journal append per invocation) — ``benchmarks.trend --workspace`` ingests
+those records directly, no artifact files needed.  ``--json`` writes are
+atomic (temp-then-rename), so a killed benchmark run never leaves a torn
+artifact.
 """
-import json
-import os
 import sys
 
 from .bench_apps import run_fig13
@@ -27,7 +33,7 @@ from .bench_policies import run_fig8
 from .bench_scaling import run_fig7
 from .bench_scenarios import run_scen
 from .bench_tick import run_kern
-from .common import drain_run_log, emit
+from .common import bench_env, drain_run_log, emit
 
 SECTIONS = {
     "fig7": run_fig7,
@@ -72,18 +78,57 @@ def list_sections() -> None:
             print(f"    {pattern}")
 
 
+def record_to_workspace(root: str, all_rows: dict) -> int:
+    """One ``bench`` record per measurement row, flushed as a single
+    buffered journal append.  Keys reuse the trend convention: the row's
+    scheduler/params_hash attribution plus the env fingerprint, so trend
+    series and workspace records line up one-to-one."""
+    from repro.workspace import (RunKey, RunRecord, WorkspaceStore,
+                                 env_fingerprint)
+
+    from .trend import _attribute, parse_value
+
+    store = WorkspaceStore(root)
+    env = env_fingerprint()
+    n = 0
+    with store.buffered("bench") as buf:
+        for section, sec in all_rows.items():
+            for row in sec["rows"]:
+                run = _attribute(row["name"], sec["runs"])
+                key = RunKey(
+                    section="bench", name=f"{section}/{row['name']}",
+                    scheduler=run.get("scheduler") or "",
+                    params_hash=run.get("params_hash") or "",
+                    scenario_hash="", env=env)
+                buf.put(RunRecord(key=key, payload={
+                    "value": parse_value(row["derived"]),
+                    "us_per_call": parse_value(row["us_per_call"]),
+                    "derived": row["derived"],
+                    "dropped": run.get("dropped"),
+                    "idle_worker_ticks": run.get("idle_worker_ticks")}))
+                n += 1
+    return n
+
+
 def main() -> None:
     argv = sys.argv[1:]
     if "--list" in argv:
         list_sections()
         return
-    json_path = None
+    json_path = workspace_root = None
     if "--json" in argv:
         i = argv.index("--json")
         try:
             json_path = argv[i + 1]
         except IndexError:
             raise SystemExit("--json requires a path argument") from None
+        argv = argv[:i] + argv[i + 2:]
+    if "--workspace" in argv:
+        i = argv.index("--workspace")
+        try:
+            workspace_root = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--workspace requires a path argument") from None
         argv = argv[:i] + argv[i + 2:]
     want = argv or list(SECTIONS)
     all_rows: dict[str, dict] = {}
@@ -103,15 +148,14 @@ def main() -> None:
             "runs": drain_run_log(),
         }
     if json_path:
-        doc = {
-            "sections": all_rows,
-            "env": {k: os.environ[k] for k in sorted(os.environ)
-                    if k.startswith(("BENCH_", "XLA_FLAGS"))
-                    or k == "JAX_PLATFORMS"},
-        }
-        with open(json_path, "w") as f:
-            json.dump(doc, f, indent=2)
+        from repro.workspace import atomic_write_json
+        doc = {"sections": all_rows, "env": bench_env()}
+        atomic_write_json(json_path, doc)
         print(f"# wrote {json_path}", file=sys.stderr)
+    if workspace_root:
+        n = record_to_workspace(workspace_root, all_rows)
+        print(f"# recorded {n} rows -> workspace {workspace_root}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,13 @@ so a regressing commit never becomes the next run's baseline.
 
     python -m benchmarks.trend BENCH_fig12.json BENCH_fig8.json \
         --history BENCH_TREND.json --label $GITHUB_SHA --gate 30
+
+``--workspace DIR`` ingests straight from a :mod:`repro.workspace` store
+(the ``bench`` records ``benchmarks.run --workspace`` writes) instead of —
+or in addition to — artifact files; duplicate (label, key) points collapse,
+so passing both is harmless.  The history itself is written atomically
+(temp-then-rename) and a corrupt existing history is tolerated with a
+warning and a fresh start.
 """
 from __future__ import annotations
 
@@ -100,9 +107,21 @@ def point_key(p: dict) -> tuple:
 
 
 def load_history(path: Optional[str]) -> dict:
+    """The rolling history, or a fresh one.  A corrupt file (a crashed
+    earlier writer, pre-atomic-rename) is tolerated with a warning and a
+    restarted trend — losing the trajectory beats refusing every future
+    ingest."""
     if path and os.path.exists(path):
-        with open(path) as f:
-            return json.load(f)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict) or not isinstance(
+                    doc.get("points"), list):
+                raise ValueError("not a {'points': [...]} document")
+            return doc
+        except (json.JSONDecodeError, ValueError) as e:
+            print(f"WARNING: corrupt trend history {path} ({e}); "
+                  f"starting a fresh history", file=sys.stderr)
     return {"points": []}
 
 
@@ -176,12 +195,37 @@ def gate(history: dict, gate_pct: float, latest_label: str) -> list[str]:
     return failures
 
 
+def workspace_points(root: str, label: str) -> list[dict]:
+    """Trend points from ``benchmarks.run --workspace`` records (section
+    ``bench``, one record per measurement row) — the artifact-file-free
+    ingest path."""
+    from repro.workspace import WorkspaceStore
+
+    points = []
+    for rec in WorkspaceStore(root).query(section="bench"):
+        section, _, name = rec.key.name.partition("/")
+        p = rec.payload
+        points.append({
+            "label": label, "section": section, "name": name,
+            "value": p.get("value"), "us_per_call": p.get("us_per_call"),
+            "scheduler": rec.key.scheduler or None,
+            "params_hash": rec.key.params_hash or None,
+            "dropped": p.get("dropped"),
+            "idle_worker_ticks": p.get("idle_worker_ticks"),
+            "env": rec.key.env,
+        })
+    return [p for p in points if p["value"] is not None]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="benchmarks.trend", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("artifacts", nargs="+", help="BENCH_*.json inputs")
+    ap.add_argument("artifacts", nargs="*", help="BENCH_*.json inputs")
     ap.add_argument("--history", help="rolling BENCH_TREND.json (read+write)")
+    ap.add_argument("--workspace", metavar="DIR",
+                    help="also ingest 'bench' records from this workspace "
+                         "store (benchmarks.run --workspace)")
     ap.add_argument("--label", default=None,
                     help="label for this ingest (default: GITHUB_SHA or 'local')")
     ap.add_argument("--gate", type=float, default=30.0,
@@ -189,6 +233,9 @@ def main(argv=None) -> int:
     ap.add_argument("--no-gate", action="store_true",
                     help="ingest and print only; never fail")
     args = ap.parse_args(argv)
+    if not args.artifacts and not args.workspace:
+        ap.error("nothing to ingest: pass BENCH_*.json artifacts "
+                 "and/or --workspace DIR")
 
     label = args.label or os.environ.get("GITHUB_SHA", "local")[:12]
     points = []
@@ -200,6 +247,8 @@ def main(argv=None) -> int:
             print(f"cannot read artifact {path}: {e}", file=sys.stderr)
             return 2
         points.extend(extract_points(doc, label))
+    if args.workspace:
+        points.extend(workspace_points(args.workspace, label))
     if not points:
         print("no gateable rows found in the artifacts", file=sys.stderr)
         return 2
@@ -217,8 +266,10 @@ def main(argv=None) -> int:
             print(f"# history NOT updated ({args.history}): gate failed",
                   file=sys.stderr)
         else:
-            with open(args.history, "w") as f:
-                json.dump(history, f, indent=2)
+            # atomic temp-then-rename: a crash mid-dump must never leave a
+            # torn history that poisons every later ingest
+            from repro.workspace import atomic_write_json
+            atomic_write_json(args.history, history)
             print(f"# history: {args.history} "
                   f"({len(history['points'])} points)", file=sys.stderr)
     return 1 if failures else 0

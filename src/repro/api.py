@@ -801,7 +801,9 @@ class Experiment:
         return points
 
     def sweep(self, grid, seconds: float,
-              seeds: Sequence[int] = tuple(range(4))) -> SweepResult:
+              seeds: Sequence[int] = tuple(range(4)), *,
+              workspace=None, campaign: str = "sweep",
+              chunk: Optional[int] = None) -> SweepResult:
         """One compile for the whole grid: P param points × K seeds.
 
         ``grid`` is a sequence of params instances or a ``{field: values}``
@@ -816,7 +818,23 @@ class Experiment:
         (each device runs ``P / P_dev`` whole points), orthogonal to the
         server-slab sharding — still one compile, still bit-identical
         (``tests/test_shard.py``).
+
+        ``workspace`` (a :class:`repro.workspace.WorkspaceStore` or a
+        directory path) makes the sweep **resumable**: points already
+        recorded under ``campaign`` are reused bit-identically and only the
+        missing ones are computed — optionally ``chunk`` points per compile
+        so an interrupted run loses at most one chunk (see
+        ``docs/workspace.md``).
         """
+        if workspace is not None:
+            from repro.workspace import WorkspaceStore
+            from repro.workspace.campaign import run_sweep
+            if not isinstance(workspace, WorkspaceStore):
+                workspace = WorkspaceStore(workspace)
+            result, _ = run_sweep(self, grid, seconds, seeds=seeds,
+                                  store=workspace, campaign=campaign,
+                                  chunk=chunk)
+            return result
         if not self.jobs:
             raise ValueError("sweep() needs at least one add_job()")
         points = self._expand_grid(grid)
@@ -831,15 +849,24 @@ class Experiment:
             dropped=raw["dropped"],
             idle_worker_ticks=raw["idle_worker_ticks"], ticks=raw["ticks"])
 
-    def solo(self, job: int, seconds: float) -> RunResult:
+    def solo(self, job: int, seconds: float, *,
+             workspace=None, name: str = "solo") -> RunResult:
         """Run one declared job alone (same engine config) — the baseline
-        :meth:`RunResult.slowdown` compares against."""
+        :meth:`RunResult.slowdown` compares against.  With ``workspace``
+        the run is cached by its full spec hash (computed once per
+        configuration, reused bit-identically after)."""
         clone = Experiment(
             policy=self.policy, scheduler=self.scheduler, params=self.params,
             n_servers=self.n_servers, n_workers=self.n_workers,
             server_bw=self.server_bw, max_jobs=self._slots(),
             seed=self.seed, **self.engine_kw)
         clone.jobs = [copy.deepcopy(self.jobs[job])]
+        if workspace is not None:
+            from repro.workspace import WorkspaceStore
+            from repro.workspace.campaign import run_cached
+            if not isinstance(workspace, WorkspaceStore):
+                workspace = WorkspaceStore(workspace)
+            return run_cached(clone, seconds, store=workspace, name=name)
         return clone.run(seconds)
 
     def serve(self, *, autodrain: bool = True,

@@ -30,12 +30,23 @@ default.
 from __future__ import annotations
 
 import copy
+import csv
 import dataclasses
+import io
 import json
+import math
+import os
+from typing import Iterable, Mapping, Optional, Sequence
 
 from repro.core.engine import normalize_phases
 
 SCENARIO_VERSION = 1
+
+#: Darshan-style per-rank trace record fields :meth:`Scenario.from_trace`
+#: ingests.  ``start_s``/``end_s`` are required; the rest default.
+TRACE_FIELDS = ("rank", "user", "start_s", "end_s", "bytes", "op")
+
+_TRACE_DEFAULTS = {"rank": 0, "user": 0, "bytes": 10e6, "op": "write"}
 
 
 @dataclasses.dataclass
@@ -98,3 +109,242 @@ class Scenario:
 
     def copy(self) -> "Scenario":
         return Scenario(jobs=copy.deepcopy(self.jobs), name=self.name)
+
+    # -- real-trace ingestion ------------------------------------------------
+    @classmethod
+    def from_trace(cls, records, *, name: str = "trace",
+                   gap_s: Optional[float] = None,
+                   ops: Optional[Sequence[str] | str] = None,
+                   mode: str = "interval",
+                   time_scale: float = 1.0,
+                   min_phase_s: float = 1e-3) -> "Scenario":
+        """Lower Darshan-style per-rank I/O records to a phased scenario.
+
+        ``records`` is an iterable of dicts with :data:`TRACE_FIELDS`
+        (``start_s``/``end_s`` required, ``rank``/``user``/``bytes``/``op``
+        defaulted), **or** a path to a CSV / JSON-lines trace file (see
+        :func:`parse_trace`).  One job is built per distinct ``user``;
+        its ``procs`` is the number of distinct ranks that appear, and its
+        records are **burst-clustered**: sorted by start time, two records
+        join one cluster when the gap between them is at most ``gap_s``
+        (default: 5% of the whole trace's time span), and each cluster
+        becomes one phase whose ``req_mb`` is the cluster's mean record
+        size.  Start times are shifted so the trace begins at 0 and scaled
+        by ``time_scale``.
+
+        ``mode`` picks the arrival lowering: ``"interval"`` (default)
+        replays each phase open-loop at the recorded request rate
+        (``interval_s = procs * duration / n_records``); ``"closed"``
+        makes each phase a closed loop (the population saturates the
+        phase window — demand shape from the clusters, intensity from
+        ``procs`` and request size).  ``ops`` filters records by their
+        ``op`` field (e.g. ``"write"`` or ``("read", "write")``).
+
+        The result is an ordinary :class:`Scenario`: it JSON round-trips,
+        sweeps in one compile, and replays on both planes like any
+        hand-written spec.
+        """
+        recs = parse_trace(records)
+        if isinstance(ops, str):
+            ops = (ops,)
+        if ops is not None:
+            recs = [r for r in recs if r["op"] in ops]
+        if not recs:
+            raise ValueError(
+                f"trace {name!r}: no records"
+                + (f" with op in {tuple(ops)}" if ops else ""))
+        if mode not in ("interval", "closed"):
+            raise ValueError(
+                f"from_trace mode must be 'interval' or 'closed', "
+                f"got {mode!r}")
+        if time_scale <= 0:
+            raise ValueError(f"time_scale must be > 0, got {time_scale}")
+        t0 = min(r["start_s"] for r in recs)
+        span = max(r["end_s"] for r in recs) - t0
+        if gap_s is None:
+            gap_s = 0.05 * span * time_scale
+        jobs = []
+        by_user: dict[int, list[dict]] = {}
+        for r in recs:
+            by_user.setdefault(r["user"], []).append(r)
+        for user in sorted(by_user):
+            urecs = sorted(by_user[user],
+                           key=lambda r: (r["start_s"], r["end_s"], r["rank"]))
+            procs = len({r["rank"] for r in urecs})
+            clusters = _cluster_bursts(urecs, t0, time_scale, gap_s,
+                                       min_phase_s)
+            phases = []
+            for c in clusters:
+                ph = dict(start_s=c["start_s"], end_s=c["end_s"],
+                          req_mb=c["bytes"] / c["count"] / 1e6)
+                if mode == "interval":
+                    ph["arrival"] = "interval"
+                    ph["interval_s"] = max(
+                        procs * (c["end_s"] - c["start_s"]) / c["count"],
+                        1e-6)
+                phases.append(ph)
+            jobs.append(dict(user=int(user), procs=procs,
+                             size=max(1, math.ceil(procs / 56)),
+                             phases=phases))
+        return cls(jobs=jobs, name=name)
+
+
+# -- trace parsing -------------------------------------------------------------
+
+def parse_trace(records) -> list[dict]:
+    """Normalize trace input to a list of per-rank record dicts.
+
+    Accepts an iterable of mappings (already-parsed records), an open text
+    stream, or a path (str / ``os.PathLike``) to a trace file.  Files are
+    sniffed by their first non-blank character: ``{`` means JSON-lines (one
+    record object per line), anything else is CSV with a header row naming
+    a subset of :data:`TRACE_FIELDS`.  Every record is validated the way
+    job specs are: unknown fields raise with the accepted vocabulary,
+    missing ``start_s``/``end_s`` raise, the rest take
+    :data:`_TRACE_DEFAULTS`.
+    """
+    if isinstance(records, (str, os.PathLike)):
+        with open(records) as f:
+            return _parse_trace_text(f.read(), str(records))
+    if isinstance(records, io.TextIOBase):
+        return _parse_trace_text(records.read(), "<stream>")
+    return [_normalize_record(r, i) for i, r in enumerate(records)]
+
+
+def _parse_trace_text(text: str, where: str) -> list[dict]:
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        return []
+    if lines[0].lstrip().startswith("{"):
+        docs = []
+        for i, ln in enumerate(lines):
+            try:
+                docs.append(json.loads(ln))
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"{where} line {i + 1}: bad JSON record: {e}") from None
+        return [_normalize_record(r, i) for i, r in enumerate(docs)]
+    rows = list(csv.DictReader(io.StringIO("\n".join(lines))))
+    return [_normalize_record(r, i) for i, r in enumerate(rows)]
+
+
+def _normalize_record(rec, i: int) -> dict:
+    if not isinstance(rec, Mapping):
+        raise TypeError(
+            f"trace record {i}: expected a dict, got {type(rec).__name__}")
+    unknown = sorted(set(rec) - set(TRACE_FIELDS))
+    if unknown:
+        raise ValueError(
+            f"trace record {i}: unknown field(s) {unknown}. Accepted "
+            f"fields: {list(TRACE_FIELDS)}.")
+    for f in ("start_s", "end_s"):
+        if rec.get(f) in (None, ""):
+            raise ValueError(
+                f"trace record {i}: missing required field {f!r} "
+                f"(fields: {list(TRACE_FIELDS)})")
+    out = {**_TRACE_DEFAULTS, **{k: v for k, v in rec.items()
+                                 if v not in (None, "")}}
+    try:
+        out = dict(rank=int(out["rank"]), user=int(out["user"]),
+                   start_s=float(out["start_s"]), end_s=float(out["end_s"]),
+                   bytes=float(out["bytes"]), op=str(out["op"]))
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"trace record {i}: bad value: {e}") from None
+    if out["end_s"] < out["start_s"]:
+        raise ValueError(
+            f"trace record {i}: end_s {out['end_s']} < start_s "
+            f"{out['start_s']}")
+    return out
+
+
+def _cluster_bursts(urecs: Iterable[Mapping], t0: float, time_scale: float,
+                    gap_s: float, min_phase_s: float) -> list[dict]:
+    """Greedy single-pass burst clustering of one user's sorted records:
+    a record joins the open cluster when it starts within ``gap_s`` of the
+    cluster's current end, else it opens a new one.  Returns cluster dicts
+    ``{start_s, end_s, bytes, count}`` in the shifted/scaled time domain,
+    each at least ``min_phase_s`` long and clamped non-overlapping."""
+    clusters: list[dict] = []
+    for r in urecs:
+        s = (r["start_s"] - t0) * time_scale
+        e = (r["end_s"] - t0) * time_scale
+        if clusters and s <= clusters[-1]["end_s"] + gap_s:
+            c = clusters[-1]
+            c["end_s"] = max(c["end_s"], e)
+            c["bytes"] += r["bytes"]
+            c["count"] += 1
+        else:
+            clusters.append(dict(start_s=s, end_s=e, bytes=r["bytes"],
+                                 count=1))
+    for c in clusters:
+        c["end_s"] = max(c["end_s"], c["start_s"] + min_phase_s)
+    for a, b in zip(clusters, clusters[1:]):     # keep phases non-overlapping
+        a["end_s"] = min(a["end_s"], b["start_s"])
+    return clusters
+
+
+# -- preset library ------------------------------------------------------------
+
+#: Horizon the presets are shaped for (phase windows are fractions of it);
+#: run them at this ``seconds`` — or scale, they only pin the *shape*.
+PRESET_SECONDS = 24.0
+
+
+def _preset_jobs() -> dict[str, list[dict]]:
+    t = PRESET_SECONDS
+    period = t / 6
+    return {
+        # WRF-style: two apps checkpoint 40% of each period, staggered a
+        # half-period apart, over a steady background writer.
+        "checkpoint-heavy": [
+            dict(user=0, size=4, procs=64, req_mb=8, phases=[
+                dict(start_s=i * period, duration_s=0.4 * period)
+                for i in range(6)]),
+            dict(user=1, size=4, procs=64, req_mb=8, phases=[
+                dict(start_s=(i + 0.5) * period, duration_s=0.4 * period)
+                for i in range(5)]),
+            dict(user=9, size=1, procs=112, req_mb=10, end_s=t),
+        ],
+        # training-ingest readers: steady open-loop prefetch at a fixed
+        # request rate per rank, small requests, against one bulk writer.
+        "ml-ingest": [
+            dict(user=0, size=2, procs=112, req_mb=1, end_s=t,
+                 arrival="interval", interval_s=0.02),
+            dict(user=1, size=2, procs=112, req_mb=1, end_s=t,
+                 arrival="interval", interval_s=0.02),
+            dict(user=2, size=1, procs=56, req_mb=16, end_s=t),
+        ],
+        # post-hoc analytics: one wide closed-loop scan of large requests
+        # plus a latency-sensitive small-request interactive user.
+        "analytics-scan": [
+            dict(user=0, size=8, procs=448, req_mb=64, end_s=t),
+            dict(user=1, size=1, procs=28, req_mb=1, end_s=t,
+                 arrival="interval", interval_s=0.05),
+        ],
+        # the Fig. 12 antagonist: a steady victim app vs a heavy burster
+        # that goes idle in the middle third (opportunity-fairness probe).
+        "bursty-interferer": [
+            dict(user=0, size=1, procs=56, req_mb=10, end_s=t),
+            dict(user=1, size=1, procs=224, req_mb=10, phases=[
+                dict(start_s=0.0, end_s=t / 3),
+                dict(start_s=2 * t / 3, end_s=t)]),
+        ],
+    }
+
+
+def presets() -> dict[str, Scenario]:
+    """The named scenario library — fresh, validated :class:`Scenario`
+    copies on every call (mutating one never corrupts the library).  Use
+    with ``Experiment.from_scenario(preset("ml-ingest"), ...)`` or sweep
+    them in ``benchmarks/bench_scenarios.py``."""
+    return {name: Scenario(jobs=jobs, name=name)
+            for name, jobs in _preset_jobs().items()}
+
+
+def preset(name: str) -> Scenario:
+    """One preset by name; unknown names list the library."""
+    lib = _preset_jobs()
+    if name not in lib:
+        raise KeyError(
+            f"unknown preset {name!r}; available: {sorted(lib)}")
+    return Scenario(jobs=lib[name], name=name)

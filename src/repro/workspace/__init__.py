@@ -1,0 +1,35 @@
+"""repro.workspace — a buffered, resumable experiment data space.
+
+Three layers (see ``docs/workspace.md``):
+
+* **store** (:mod:`repro.workspace.store`): content-addressed run records
+  keyed on ``(section/name, scheduler, params_hash, scenario_hash, env)``,
+  atomic write-temp-then-rename persistence, a JSON-lines journal per
+  campaign, bit-identical ndarray round-trips;
+* **buffer** (:mod:`repro.workspace.buffer`): a context-managed write
+  buffer that defers and coalesces record flushes (mtime/size-integrity
+  checked) so a 1000-point campaign costs O(1) directory writes;
+* **campaign** (:mod:`repro.workspace.campaign`): checkpoint/resume for
+  sweeps and calibration — re-running an interrupted (or grown) grid
+  computes only the missing points and reuses the rest bit-identically.
+
+Entry points: ``Experiment.sweep(..., workspace=...)``,
+``benchmarks/calibrate.py --workspace``, ``benchmarks/run.py --workspace``,
+``benchmarks/trend.py --workspace``, and the ``tools/workspace.py`` CLI.
+"""
+from repro.workspace.buffer import WriteBuffer
+from repro.workspace.campaign import (CampaignInterrupted, run_cached,
+                                      run_sweep, spec_hash)
+from repro.workspace.store import (RunKey, RunRecord, WorkspaceConflictError,
+                                   WorkspaceStore, atomic_write_json,
+                                   atomic_write_text, canonical_json,
+                                   content_hash, decode_payload,
+                                   encode_payload, env_fingerprint)
+
+__all__ = [
+    "WorkspaceStore", "RunKey", "RunRecord", "WriteBuffer",
+    "WorkspaceConflictError", "CampaignInterrupted",
+    "run_sweep", "run_cached", "spec_hash",
+    "atomic_write_json", "atomic_write_text", "canonical_json",
+    "content_hash", "encode_payload", "decode_payload", "env_fingerprint",
+]

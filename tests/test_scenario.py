@@ -428,3 +428,130 @@ class TestScenarioJson:
         doc = json.loads(self._exp().to_json("sugar"))
         assert doc["name"] == "sugar" and len(doc["jobs"]) == 2
         assert len(doc["jobs"][1]["phases"]) == 2
+
+
+class TestTraceImporter:
+    """Scenario.from_trace: Darshan-style records -> phased job specs."""
+
+    def _records(self):
+        recs = [dict(rank=r, user=0, start_s=0.00 + 0.002 * r,
+                     end_s=0.05 + 0.002 * r, bytes=8e6, op="write")
+                for r in range(4)]
+        recs += [dict(rank=r, user=0, start_s=0.30, end_s=0.35,
+                      bytes=4e6, op="write") for r in range(4)]
+        recs.append(dict(rank=0, user=3, start_s=0.0, end_s=0.4,
+                         bytes=2e6, op="read"))
+        return recs
+
+    def test_burst_clustering_one_job_per_user(self):
+        scn = Scenario.from_trace(self._records(), name="t")
+        assert scn.n_jobs == 2
+        job0 = scn.jobs[0]
+        assert job0["user"] == 0 and job0["procs"] == 4
+        assert len(scn.phases(0)) == 2            # two bursts, two phases
+        assert len(scn.phases(1)) == 1
+        # per-cluster req_mb is the cluster's mean record size
+        assert scn.phases(0)[0]["req_mb"] == pytest.approx(8.0)
+        assert scn.phases(0)[1]["req_mb"] == pytest.approx(4.0)
+
+    def test_time_shift_and_rate(self):
+        recs = [dict(rank=0, user=0, start_s=100.0, end_s=100.5,
+                     bytes=1e6, op="write"),
+                dict(rank=0, user=0, start_s=100.1, end_s=100.6,
+                     bytes=1e6, op="write")]
+        scn = Scenario.from_trace(recs)
+        ph = scn.phases(0)[0]
+        assert ph["start_s"] == 0.0               # shifted to t0=0
+        # interval replays the recorded rate: procs * duration / n_records
+        assert ph["interval_s"] == pytest.approx(1 * 0.6 / 2)
+
+    def test_csv_and_jsonl_equivalent(self, tmp_path):
+        import json as _json
+        recs = self._records()
+        csv_path = tmp_path / "t.csv"
+        cols = ("rank", "user", "start_s", "end_s", "bytes", "op")
+        csv_path.write_text(
+            ",".join(cols) + "\n" +
+            "\n".join(",".join(str(r[c]) for c in cols) for r in recs) + "\n")
+        jl_path = tmp_path / "t.jsonl"
+        jl_path.write_text("\n".join(_json.dumps(r) for r in recs) + "\n")
+        a = Scenario.from_trace(str(csv_path), name="x")
+        b = Scenario.from_trace(jl_path, name="x")
+        c = Scenario.from_trace(recs, name="x")
+        assert a.to_json() == b.to_json() == c.to_json()
+
+    def test_json_roundtrip_pins_the_import(self):
+        scn = Scenario.from_trace(self._records(), name="pin")
+        again = Scenario.from_json(scn.to_json())
+        assert again.jobs == scn.jobs
+
+    def test_deterministic_replay_both_planes(self):
+        """The imported scenario is an ordinary spec: engine runs are
+        reproducible and the functional plane accepts it too."""
+        scn = Scenario.from_trace(self._records(), name="replay")
+        exp = Experiment.from_scenario(scn, policy="job-fair", n_workers=2)
+        a = exp.run(0.4)
+        b = Experiment.from_scenario(scn, policy="job-fair",
+                                     n_workers=2).run(0.4)
+        np.testing.assert_array_equal(a.gbps, b.gbps)
+        svc = Experiment.from_scenario(scn, policy="job-fair").serve()
+        svc.clients[0].open("/f", "w")
+        svc.clients[0].write_burst("/f", n=2, nbytes=1 << 20)
+        done = svc.cluster.drain()
+        assert len(done) == 2
+
+    def test_ops_filter(self):
+        scn = Scenario.from_trace(self._records(), ops="read")
+        assert scn.n_jobs == 1 and scn.jobs[0]["user"] == 3
+        both = Scenario.from_trace(self._records(), ops=("read", "write"))
+        assert both.n_jobs == 2
+
+    def test_closed_mode_has_no_arrival_keys(self):
+        scn = Scenario.from_trace(self._records(), mode="closed")
+        assert all("arrival" not in ph for ph in scn.jobs[0]["phases"])
+
+    def test_error_cases(self):
+        with pytest.raises(ValueError, match="no records"):
+            Scenario.from_trace([dict(start_s=0, end_s=1, op="write")],
+                                ops="read")
+        with pytest.raises(ValueError, match="missing required field"):
+            Scenario.from_trace([dict(rank=0, end_s=1.0)])
+        with pytest.raises(ValueError, match="Accepted fields"):
+            Scenario.from_trace([dict(start_s=0, end_s=1, sizee=3)])
+        with pytest.raises(ValueError, match="end_s"):
+            Scenario.from_trace([dict(start_s=2.0, end_s=1.0)])
+        with pytest.raises(ValueError, match="mode"):
+            Scenario.from_trace([dict(start_s=0, end_s=1)], mode="warp")
+        with pytest.raises(ValueError, match="time_scale"):
+            Scenario.from_trace([dict(start_s=0, end_s=1)], time_scale=0)
+        with pytest.raises(TypeError, match="expected a dict"):
+            Scenario.from_trace([(0, 1)])
+
+
+class TestPresets:
+    def test_library_contents(self):
+        from repro.scenario import preset, presets
+        lib = presets()
+        assert set(lib) == {"checkpoint-heavy", "ml-ingest",
+                            "analytics-scan", "bursty-interferer"}
+        for name, scn in lib.items():
+            assert scn.name == name and scn.n_jobs >= 2
+            # every preset validates and resolves on construction
+            for j in range(scn.n_jobs):
+                assert scn.phases(j)
+        assert preset("ml-ingest").jobs == lib["ml-ingest"].jobs
+        with pytest.raises(KeyError, match="available"):
+            preset("nope")
+
+    def test_presets_are_fresh_copies(self):
+        from repro.scenario import preset
+        a = preset("bursty-interferer")
+        a.jobs[0]["req_mb"] = 999
+        assert preset("bursty-interferer").jobs[0]["req_mb"] != 999
+
+    def test_preset_runs_from_experiment(self):
+        from repro.scenario import preset
+        exp = Experiment.from_scenario(preset("bursty-interferer"),
+                                       policy="job-fair", n_workers=2)
+        res = exp.run(0.4)
+        assert res.n_jobs == 2 and float(np.sum(res.gbps)) > 0

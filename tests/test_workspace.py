@@ -1,0 +1,444 @@
+"""repro.workspace: the buffered, resumable experiment data space.
+
+Four contracts pin the tentpole:
+
+  * **bit-identity through the store** — ndarray payloads round-trip as
+    raw buffers, so a reloaded record equals the original bit for bit;
+  * **O(1) flushes** — a buffered campaign of P·K results costs one
+    journal append, not one file per point (counted via
+    ``store.io_writes``);
+  * **crash-safe resume** — a campaign killed mid-grid (``SIGKILL``, no
+    cleanup) restarts computing only the missing points, and the merged
+    ``SweepResult`` is bit-identical to an uninterrupted plain sweep, for
+    every registered scheduler;
+  * **conflict detection** — a concurrent journal append between buffer
+    entry and flush raises instead of silently interleaving.
+
+``REPRO_SCHEDULER`` focuses the per-scheduler tests (the CI scheduler
+matrix), like the rest of the lattice.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.core import (AdaptbfParams, GiftParams, PlanParams, TbfParams,
+                        available_schedulers, engine, get_scheduler)
+from repro.workspace import (CampaignInterrupted, RunKey, RunRecord,
+                             WorkspaceConflictError, WorkspaceStore,
+                             decode_payload, encode_payload,
+                             env_fingerprint, run_sweep)
+
+_FOCUS = os.environ.get("REPRO_SCHEDULER")
+SCHEDULERS = (_FOCUS,) if _FOCUS else available_schedulers()
+
+JOBS = [dict(user=0, size=1, procs=6, req_mb=10, end_s=0.4),
+        dict(user=1, size=1, procs=6, req_mb=10, end_s=0.4)]
+
+GRID = {"repay": [0.1, 0.25, 0.5, 0.75]}   # the default-exp (adaptbf) grid
+
+
+def grid_for(sched: str):
+    """Four spread points per tunable scheduler; the no-knob schedulers get
+    four default instances (identical params_hash — the campaign then keys
+    all four points to ONE record, which the tests account for)."""
+    cls = get_scheduler(sched).params_cls
+    return {
+        "gift": [GiftParams(coupon_frac=c) for c in (0.2, 0.4, 0.6, 0.8)],
+        "tbf": [TbfParams(burst_s=b) for b in (0.1, 0.25, 0.5, 1.0)],
+        "adaptbf": [AdaptbfParams(repay=r) for r in (0.1, 0.25, 0.5, 0.75)],
+        "plan": [PlanParams(ema_alpha=a) for a in (0.1, 0.3, 0.5, 0.8)],
+    }.get(sched, [cls() for _ in range(4)])
+
+
+def make_exp(sched="adaptbf"):
+    return (Experiment(policy="job-fair", scheduler=sched, n_workers=2)
+            .add_jobs(JOBS))
+
+
+def key(name="k", **kw):
+    kw.setdefault("section", "run")
+    kw.setdefault("scheduler", "themis")
+    kw.setdefault("params_hash", "p")
+    kw.setdefault("scenario_hash", "s")
+    kw.setdefault("env", env_fingerprint())
+    return RunKey(name=name, **kw)
+
+
+class TestStore:
+    def test_roundtrip_bit_identical(self, tmp_path):
+        """float32/int32 arrays (awkward values included) survive the JSON
+        codec and a fresh-from-disk reader with zero ULP drift."""
+        rng = np.random.default_rng(0)
+        payload = {
+            "gbps": rng.standard_normal((3, 5)).astype(np.float32) * 1e-7,
+            "issued": np.arange(6, dtype=np.int32).reshape(2, 3),
+            "scalar": 0.1 + 0.2,   # not representable in decimal
+            "meta": {"nested": [1, 2.5, "x"]},
+        }
+        store = WorkspaceStore(tmp_path / "ws")
+        store.put(RunRecord(key=key(), payload=payload))
+        rec = WorkspaceStore(tmp_path / "ws").get(key())
+        assert rec.payload["gbps"].tobytes() == payload["gbps"].tobytes()
+        assert rec.payload["gbps"].dtype == np.float32
+        assert np.array_equal(rec.payload["issued"], payload["issued"])
+        assert rec.payload["scalar"] == payload["scalar"]
+        assert rec.payload["meta"] == payload["meta"]
+
+    def test_codec_is_pure(self):
+        arr = np.linspace(0, 1, 7, dtype=np.float64)
+        doc = json.loads(json.dumps(encode_payload({"a": arr})))
+        assert np.array_equal(decode_payload(doc)["a"], arr)
+
+    def test_loose_write_is_atomic_no_temp_residue(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        store.put(RunRecord(key=key(), payload={"v": 1.0}))
+        assert not list((tmp_path / "ws").rglob("*.tmp-*"))
+
+    def test_torn_journal_tail_is_skipped(self, tmp_path, capsys):
+        """A SIGKILL mid-append can at worst leave one torn trailing line;
+        the reader keeps every whole record and warns."""
+        store = WorkspaceStore(tmp_path / "ws")
+        with store.buffered("camp") as buf:
+            buf.put(RunRecord(key=key("a"), payload={"v": 1.0}))
+            buf.put(RunRecord(key=key("b"), payload={"v": 2.0}))
+        path = store.journal_path("camp")
+        with open(path, "a") as f:
+            f.write('{"key": {"section": "run", "name":')   # torn
+        fresh = WorkspaceStore(tmp_path / "ws")
+        assert len(fresh) == 2
+        assert fresh.get(key("a")).payload["v"] == 1.0
+        assert "skipping" in capsys.readouterr().err
+
+    def test_query_filters(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        store.put(RunRecord(key=key("a", scheduler="fifo"), payload={}))
+        store.put(RunRecord(key=key("ab"), payload={}))
+        assert len(store.query(scheduler="fifo")) == 1
+        assert len(store.query(name="a")) == 2       # substring
+        assert len(store.query(section="sweep")) == 0
+
+    def test_journal_name_validation(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        with pytest.raises(ValueError):
+            store.journal_path("../escape")
+        with pytest.raises(ValueError):
+            store.buffered(".hidden").__enter__()
+
+
+class TestBuffer:
+    def test_o1_writes_for_many_records(self, tmp_path):
+        """The headline buffering contract: 100 records, ONE filesystem
+        write."""
+        store = WorkspaceStore(tmp_path / "ws")
+        before = store.io_writes
+        with store.buffered("camp") as buf:
+            for i in range(100):
+                buf.put(RunRecord(key=key(f"p{i}"), payload={"v": float(i)}))
+        assert store.io_writes - before == 1
+        assert len(store) == 100
+
+    def test_read_your_writes(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        with store.buffered("camp") as buf:
+            k = buf.put(RunRecord(key=key("a"), payload={"v": 1.0}))
+            assert buf.get(k).payload["v"] == 1.0
+            assert k in buf
+            assert store.get(k) is None      # not flushed yet
+
+    def test_exception_discards_buffer(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        with pytest.raises(RuntimeError, match="boom"):
+            with store.buffered("camp") as buf:
+                buf.put(RunRecord(key=key("a"), payload={}))
+                raise RuntimeError("boom")
+        assert len(store) == 0
+        assert not store.journal_path("camp").exists()
+
+    def test_put_outside_context_raises(self, tmp_path):
+        buf = WorkspaceStore(tmp_path / "ws").buffered("camp")
+        with pytest.raises(RuntimeError, match="outside"):
+            buf.put(RunRecord(key=key(), payload={}))
+
+    def test_concurrent_append_raises_conflict(self, tmp_path):
+        """Another writer touching the journal between entry and flush must
+        fail the flush, not interleave."""
+        store = WorkspaceStore(tmp_path / "ws")
+        with store.buffered("camp") as buf:
+            buf.put(RunRecord(key=key("a"), payload={}))
+        with pytest.raises(WorkspaceConflictError, match="another writer"):
+            with store.buffered("camp") as buf:
+                buf.put(RunRecord(key=key("b"), payload={}))
+                WorkspaceStore(tmp_path / "ws").journal_append(
+                    "camp", [RunRecord(key=key("c"), payload={})])
+
+    def test_gc_compacts_superseded_lines(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        for v in (1.0, 2.0, 3.0):
+            with store.buffered("camp") as buf:
+                buf.put(RunRecord(key=key("a"), payload={"v": v}))
+        report = store.gc()
+        assert report["journal_lines_dropped"] == 2
+        assert WorkspaceStore(tmp_path / "ws").get(key("a")).payload["v"] == 3.0
+
+
+class TestCampaignResume:
+    @pytest.mark.parametrize("sched", SCHEDULERS)
+    def test_interrupt_resume_bit_identical(self, sched, tmp_path):
+        """max_chunks interrupts mid-grid; the resume computes only the
+        missing points and merges bit-identically to a plain sweep — for
+        every registered scheduler."""
+        grid = grid_for(sched)
+        distinct = len({p.params_hash() for p in grid})
+        plain = make_exp(sched).sweep(grid, 0.4, seeds=(0, 1))
+        store = WorkspaceStore(tmp_path / "ws")
+        with pytest.raises(CampaignInterrupted):
+            run_sweep(make_exp(sched), grid, 0.4, seeds=(0, 1), store=store,
+                      campaign="c", chunk=1, max_chunks=2)
+        assert len(store) == min(2, distinct)
+        res, rep = run_sweep(make_exp(sched), grid, 0.4, seeds=(0, 1),
+                             store=WorkspaceStore(tmp_path / "ws"),
+                             campaign="c")
+        if distinct == len(grid):
+            assert (rep["reused"], rep["computed"]) == (2, 2)
+        else:
+            # no-knob schema: all four points share one key, so the two
+            # flushed chunks already cover the whole grid
+            assert (rep["reused"], rep["computed"]) == (4, 0)
+        assert np.asarray(res.gbps).tobytes() == \
+            np.asarray(plain.gbps).tobytes()
+        assert np.array_equal(np.asarray(res.issued),
+                              np.asarray(plain.issued))
+        assert np.array_equal(np.asarray(res.completed),
+                              np.asarray(plain.completed))
+        assert res.points == plain.points
+
+    def test_complete_campaign_never_retraces(self, tmp_path):
+        """A fully recorded campaign replays from the store with zero
+        engine traces (the resume-cost contract)."""
+        store = WorkspaceStore(tmp_path / "ws")
+        run_sweep(make_exp(), GRID, 0.4, seeds=(0,), store=store,
+                  campaign="c")
+        engine.TRACE_LOG.clear()
+        _, rep = run_sweep(make_exp(), GRID, 0.4, seeds=(0,), store=store,
+                           campaign="c")
+        assert engine.TRACE_LOG == []
+        assert (rep["reused"], rep["computed"]) == (4, 0)
+        assert rep["io_writes"] == 0
+
+    def test_grown_grid_computes_only_new_points(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        run_sweep(make_exp(), {"repay": [0.1, 0.25]}, 0.4, seeds=(0,),
+                  store=store, campaign="c")
+        _, rep = run_sweep(make_exp(), GRID, 0.4, seeds=(0,), store=store,
+                           campaign="c")
+        assert (rep["reused"], rep["computed"]) == (2, 2)
+
+    def test_spec_change_invalidates_records(self, tmp_path):
+        """A different horizon is a different scenario_hash: nothing may be
+        reused across it."""
+        store = WorkspaceStore(tmp_path / "ws")
+        run_sweep(make_exp(), GRID, 0.4, seeds=(0,), store=store,
+                  campaign="c")
+        _, rep = run_sweep(make_exp(), GRID, 0.3, seeds=(0,), store=store,
+                           campaign="c")
+        assert rep["reused"] == 0 and rep["computed"] == 4
+
+    def test_sweep_workspace_facade(self, tmp_path):
+        """Experiment.sweep(workspace=...) accepts a plain path and matches
+        the direct campaign result bit for bit."""
+        plain = make_exp().sweep(GRID, 0.4, seeds=(0,))
+        res = make_exp().sweep(GRID, 0.4, seeds=(0,),
+                               workspace=tmp_path / "ws", campaign="c")
+        assert np.asarray(res.gbps).tobytes() == \
+            np.asarray(plain.gbps).tobytes()
+        again = make_exp().sweep(GRID, 0.4, seeds=(0,),
+                                 workspace=str(tmp_path / "ws"), campaign="c")
+        assert np.asarray(again.gbps).tobytes() == \
+            np.asarray(plain.gbps).tobytes()
+
+    def test_solo_run_cached(self, tmp_path):
+        store = WorkspaceStore(tmp_path / "ws")
+        exp = make_exp()
+        first = exp.solo(1, 0.4, workspace=store, name="base")
+        engine.TRACE_LOG.clear()
+        again = exp.solo(1, 0.4, workspace=store, name="base")
+        assert engine.TRACE_LOG == []
+        assert np.asarray(again.gbps).tobytes() == \
+            np.asarray(first.gbps).tobytes()
+
+
+_KILL_SCRIPT = textwrap.dedent("""
+    import os, signal, sys
+    sys.path.insert(0, sys.argv[3])            # tests/ for grid_for
+    from repro.api import Experiment
+    from repro.workspace import WorkspaceStore, run_sweep
+    from test_workspace import grid_for
+
+    root, sched = sys.argv[1], sys.argv[2]
+    exp = (Experiment(policy="job-fair", scheduler=sched, n_workers=2)
+           .add_jobs([dict(user=0, size=1, procs=6, req_mb=10, end_s=0.4),
+                      dict(user=1, size=1, procs=6, req_mb=10, end_s=0.4)]))
+
+    def die(ci, n):
+        os.kill(os.getpid(), signal.SIGKILL)   # no atexit, no cleanup
+
+    run_sweep(exp, grid_for(sched), 0.4, seeds=(0, 1),
+              store=WorkspaceStore(root), campaign="killed", chunk=2,
+              progress=die)
+""")
+
+
+class TestSigkillResume:
+    @pytest.mark.parametrize("sched", (_FOCUS,) if _FOCUS else ("adaptbf",))
+    def test_sigkill_mid_campaign_then_resume(self, sched, tmp_path):
+        """The real crash: a subprocess campaign is SIGKILLed right after
+        its first chunk's flush.  The restart sees exactly that chunk,
+        computes only the rest, and the merge equals a plain sweep bit for
+        bit.  (The CI scheduler matrix runs this per scheduler via
+        REPRO_SCHEDULER.)"""
+        root = tmp_path / "ws"
+        tests_dir = os.path.dirname(os.path.abspath(__file__))
+        proc = subprocess.run(
+            [sys.executable, "-c", _KILL_SCRIPT, str(root), sched, tests_dir],
+            env={**os.environ, "JAX_PLATFORMS": "cpu"},
+            capture_output=True, text=True, timeout=600)
+        assert proc.returncode == -signal.SIGKILL, proc.stderr
+
+        grid = grid_for(sched)
+        hashes = [p.params_hash() for p in grid]
+        store = WorkspaceStore(root)
+        assert len(store) == len(set(hashes[:2])), \
+            "exactly the first chunk must be recorded"
+        plain = make_exp(sched).sweep(grid, 0.4, seeds=(0, 1))
+        res, rep = run_sweep(make_exp(sched), grid, 0.4, seeds=(0, 1),
+                             store=store, campaign="killed")
+        if len(set(hashes)) == len(grid):
+            assert (rep["reused"], rep["computed"]) == (2, 2)
+        else:
+            assert (rep["reused"], rep["computed"]) == (4, 0)
+        assert np.asarray(res.gbps).tobytes() == \
+            np.asarray(plain.gbps).tobytes()
+        assert np.array_equal(np.asarray(res.completed),
+                              np.asarray(plain.completed))
+
+
+@pytest.mark.slow
+class TestThousandPoints:
+    def test_1000_point_campaign_o1_flushes_and_resume(self, tmp_path):
+        """The acceptance bar verbatim: a 1000-point campaign interrupted
+        mid-grid resumes computing only the incomplete points, the final
+        SweepResult is bit-identical to the uninterrupted sweep, and the
+        whole thing cost O(chunks) filesystem writes, not O(P·K)."""
+        grid = {"repay": [i / 1000 for i in range(1000)]}
+        plain = make_exp().sweep(grid, 0.4, seeds=(0,))
+        store = WorkspaceStore(tmp_path / "ws")
+        before = store.io_writes
+        with pytest.raises(CampaignInterrupted):
+            run_sweep(make_exp(), grid, 0.4, seeds=(0,), store=store,
+                      campaign="big", chunk=500, max_chunks=1)
+        assert store.io_writes - before == 1      # 500 points, one write
+        res, rep = run_sweep(make_exp(), grid, 0.4, seeds=(0,), store=store,
+                             campaign="big", chunk=500)
+        assert (rep["reused"], rep["computed"]) == (500, 500)
+        assert rep["io_writes"] == 1
+        assert np.asarray(res.gbps).tobytes() == \
+            np.asarray(plain.gbps).tobytes()
+
+
+class TestTrendWorkspace:
+    def _bench_store(self, root, value=22.0):
+        store = WorkspaceStore(root)
+        with store.buffered("bench") as buf:
+            buf.put(RunRecord(
+                key=RunKey(section="bench",
+                           name="fig12/fig12_themis_sustained_gbps",
+                           scheduler="themis", params_hash="abc",
+                           scenario_hash="", env="s=5/k=2"),
+                payload={"value": value, "us_per_call": 100.0,
+                         "derived": f"{value}GB/s", "dropped": 0,
+                         "idle_worker_ticks": 3}))
+        return store
+
+    def test_trend_ingests_workspace_records(self, tmp_path, capsys):
+        from benchmarks import trend
+        self._bench_store(tmp_path / "ws")
+        hist = tmp_path / "hist.json"
+        rc = trend.main(["--workspace", str(tmp_path / "ws"),
+                         "--history", str(hist), "--label", "one"])
+        assert rc == 0
+        capsys.readouterr()
+        doc = json.loads(hist.read_text())
+        (pt,) = doc["points"]
+        assert pt["value"] == 22.0 and pt["params_hash"] == "abc"
+        assert pt["section"] == "fig12" and pt["env"] == "s=5/k=2"
+
+    def test_trend_gates_on_workspace_regression(self, tmp_path, capsys):
+        from benchmarks import trend
+        self._bench_store(tmp_path / "ws", value=22.0)
+        hist = tmp_path / "hist.json"
+        assert trend.main(["--workspace", str(tmp_path / "ws"),
+                           "--history", str(hist), "--label", "one"]) == 0
+        self._bench_store(tmp_path / "ws2", value=2.0)   # -91%
+        rc = trend.main(["--workspace", str(tmp_path / "ws2"),
+                         "--history", str(hist), "--label", "two"])
+        capsys.readouterr()
+        assert rc == 1
+
+    def test_trend_tolerates_corrupt_history(self, tmp_path, capsys):
+        from benchmarks import trend
+        self._bench_store(tmp_path / "ws")
+        hist = tmp_path / "hist.json"
+        hist.write_text("{not json")
+        rc = trend.main(["--workspace", str(tmp_path / "ws"),
+                         "--history", str(hist), "--label", "one"])
+        err = capsys.readouterr().err
+        assert rc == 0
+        assert "corrupt trend history" in err
+        assert len(json.loads(hist.read_text())["points"]) == 1
+
+    def test_trend_requires_some_input(self, capsys):
+        from benchmarks import trend
+        with pytest.raises(SystemExit):
+            trend.main([])
+        assert "nothing to ingest" in capsys.readouterr().err
+
+
+class TestCli:
+    def _tool(self):
+        import importlib.util
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        spec = importlib.util.spec_from_file_location(
+            "workspace_cli", os.path.join(repo, "tools", "workspace.py"))
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+    def test_ls_query_gc_export(self, tmp_path, capsys):
+        tool = self._tool()
+        store = WorkspaceStore(tmp_path / "ws")
+        with store.buffered("camp") as buf:
+            for i in range(3):
+                buf.put(RunRecord(key=key(f"p{i}"),
+                                  payload={"gbps": np.ones(4)}))
+        root = str(tmp_path / "ws")
+        assert tool.main(["ls", root]) == 0
+        out = capsys.readouterr().out
+        assert "3 records" in out and "campaign camp" in out
+        assert tool.main(["query", root, "--name", "p1", "--payload"]) == 0
+        assert "run/p1" in capsys.readouterr().out
+        assert tool.main(["gc", root]) == 0
+        capsys.readouterr()
+        dump = str(tmp_path / "out.json")
+        assert tool.main(["export", root, dump]) == 0
+        capsys.readouterr()
+        doc = json.loads(open(dump).read())
+        assert len(doc["records"]) == 3
+        arr = decode_payload(doc["records"][0]["payload"])["gbps"]
+        assert np.array_equal(arr, np.ones(4))

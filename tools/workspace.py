@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Inspect and maintain a :mod:`repro.workspace` store from the shell.
+
+Four subcommands over a workspace directory (the thing
+``Experiment.sweep(..., workspace=...)``, ``benchmarks.calibrate
+--workspace`` and ``benchmarks.run --workspace`` write):
+
+    python tools/workspace.py ls WS                    # campaigns + counts
+    python tools/workspace.py query WS --section sweep --scheduler adaptbf
+    python tools/workspace.py gc WS                    # compact journals
+    python tools/workspace.py export WS out.json       # portable dump
+
+``ls`` summarizes: campaigns with their distinct-record counts, loose
+records, total records.  ``query`` prints one line per matching record key
+(``--payload`` adds the decoded payload as JSON — ndarrays become
+``shape/dtype`` summaries, not megabytes of base64).  ``gc`` removes
+crashed-write temp files and rewrites journals keeping only the newest
+line per key.  ``export`` writes every matching record into one
+self-contained JSON document (the raw base64 ndarray envelopes, so an
+export round-trips bit-identically).
+
+Needs ``PYTHONPATH=src`` (or an installed ``repro``), like the benchmarks.
+"""
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def _store(root):
+    from repro.workspace import WorkspaceStore
+    return WorkspaceStore(root)
+
+
+def _summary(value):
+    if isinstance(value, np.ndarray):
+        return f"ndarray[{value.dtype} {'x'.join(map(str, value.shape))}]"
+    return value
+
+
+def cmd_ls(args) -> int:
+    store = _store(args.root)
+    campaigns = store.campaigns()
+    print(f"workspace {store.root}: {len(store)} records "
+          f"({store.loose_count()} loose)")
+    for name, count in campaigns.items():
+        print(f"  campaign {name}: {count} records")
+    sections = {}
+    for rec in store.records():
+        sections[rec.key.section] = sections.get(rec.key.section, 0) + 1
+    for section, count in sorted(sections.items()):
+        print(f"  section {section}: {count} records")
+    return 0
+
+
+def _query(store, args):
+    return store.query(section=args.section, scheduler=args.scheduler,
+                       name=args.name, scenario_hash=args.scenario_hash,
+                       env=args.env)
+
+
+def cmd_query(args) -> int:
+    store = _store(args.root)
+    recs = _query(store, args)
+    for rec in recs:
+        k = rec.key
+        line = (f"{k.key_hash} {k.section}/{k.name} sched={k.scheduler or '-'} "
+                f"params={k.params_hash or '-'} spec={k.scenario_hash or '-'} "
+                f"env={k.env}")
+        print(line)
+        if args.payload:
+            doc = {f: _summary(v) for f, v in rec.payload.items()}
+            print("  " + json.dumps(doc, default=str))
+    print(f"# {len(recs)} record(s)", file=sys.stderr)
+    return 0
+
+
+def cmd_gc(args) -> int:
+    report = _store(args.root).gc()
+    print(f"gc: removed {report['tmp_removed']} temp file(s), dropped "
+          f"{report['journal_lines_dropped']} superseded journal line(s)")
+    return 0
+
+
+def cmd_export(args) -> int:
+    from repro.workspace import atomic_write_json
+    store = _store(args.root)
+    recs = _query(store, args)
+    # to_doc keeps the base64 ndarray envelopes: the export re-imports
+    # bit-identically (and atomically, like every workspace write)
+    atomic_write_json(args.out, {"workspace_export": 1,
+                                 "records": [r.to_doc() for r in recs]})
+    print(f"# exported {len(recs)} record(s) -> {args.out}", file=sys.stderr)
+    return 0
+
+
+def _add_filters(sub) -> None:
+    sub.add_argument("--section")
+    sub.add_argument("--scheduler")
+    sub.add_argument("--name", help="substring match on the key name")
+    sub.add_argument("--scenario-hash", dest="scenario_hash")
+    sub.add_argument("--env")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/workspace.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    ls = sub.add_parser("ls", help="campaigns, sections, record counts")
+    ls.add_argument("root")
+    ls.set_defaults(fn=cmd_ls)
+
+    q = sub.add_parser("query", help="print matching record keys")
+    q.add_argument("root")
+    _add_filters(q)
+    q.add_argument("--payload", action="store_true",
+                   help="also print each record's payload (summarized)")
+    q.set_defaults(fn=cmd_query)
+
+    gc = sub.add_parser("gc", help="compact journals, drop temp files")
+    gc.add_argument("root")
+    gc.set_defaults(fn=cmd_gc)
+
+    ex = sub.add_parser("export", help="dump matching records to one JSON")
+    ex.add_argument("root")
+    ex.add_argument("out")
+    _add_filters(ex)
+    ex.set_defaults(fn=cmd_export)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
