@@ -24,28 +24,30 @@ from __future__ import annotations
 
 import time
 
-from repro.scenario import presets
+from repro.scenario import leaf, mask, overlay, presets, repeat, to_jobs
 
 from .common import bench_seconds, simulate
+
+# Both pinned scenarios are spelled in the combinator algebra
+# (docs/scenarios.md#combinators); they lower to the same [J, P] arrays as
+# their former hand-built phase lists, so the trend series are unbroken.
 
 
 def _onoff_jobs(t: float) -> list[dict]:
     """Steady app + heavy burster idle in the middle third of the run."""
-    return [
-        dict(user=0, size=1, procs=56, req_mb=10, end_s=t),
-        dict(user=1, size=1, procs=224, req_mb=10, phases=[
-            dict(start_s=0.0, end_s=t / 3),
-            dict(start_s=2 * t / 3, end_s=t)]),
-    ]
+    app = leaf(dict(user=0, size=1, procs=56, req_mb=10, end_s=t))
+    burster = leaf(dict(user=1, size=1, procs=224, req_mb=10, end_s=t))
+    return to_jobs(overlay(app, mask(burster, end_s=t / 3)
+                           | mask(burster, start_s=2 * t / 3, end_s=t)))
 
 
 def _ckpt_jobs(t: float) -> list[dict]:
     """WRF-like 4-node app checkpointing 40% of each period + background."""
     period = t / 6
-    app = dict(user=0, size=4, procs=64, req_mb=8, phases=[
-        dict(start_s=i * period, duration_s=0.4 * period) for i in range(6)])
-    bg = dict(user=9, size=1, procs=224, req_mb=10, end_s=t)
-    return [app, bg]
+    on = leaf(dict(user=0, size=4, procs=64, req_mb=8,
+                   phases=[dict(start_s=0.0, duration_s=0.4 * period)]))
+    bg = leaf(dict(user=9, size=1, procs=224, req_mb=10, end_s=t))
+    return to_jobs(overlay(repeat(on, 6, period_s=period), bg))
 
 
 def run_scen() -> list[tuple]:

@@ -61,14 +61,15 @@ from typing import Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
-from repro.bb.service import BBClient, BBCluster, JobMeta
+from repro.bb.service import BBClient, BBCluster, JobMeta, phase_at
 from repro.core import metrics
 from repro.core.engine import (EngineConfig, make_workload, normalize_phases,
                                run, run_batch)
 from repro.core.params import SchedulerParams
 from repro.core.policy import Policy
 from repro.core.scheduler import get_scheduler
-from repro.scenario import Scenario
+from repro.scenario import Scenario, ir as scn_ir
+from repro.scenario.lowering import lower_for_config
 
 _LEGACY_KEYS = ("gbps", "bin_s", "issued", "completed", "dropped",
                 "idle_worker_ticks", "ticks", "state", "seeds")
@@ -363,8 +364,9 @@ class ExperimentService:
         n_rounds = max(1, int(round(seconds / round_s)))
         counts = np.zeros((len(self.jobs), n_rounds), np.int32)
         order: list[list[int]] = []
-        phases = [normalize_phases(spec, f"job {j}")
-                  for j, spec in enumerate(self.jobs)]
+        # both planes walk the SAME canonical lowering: these resolved
+        # phases are the ones the engine's [J, P] arrays were built from
+        low = lower_for_config(self.jobs, self.cluster.cfg)
         slot_of = {c.job.job_id: j for j, c in enumerate(self.clients)}
         for j, c in enumerate(self.clients):
             c.open(f"/replay_{j}", "w")
@@ -372,8 +374,7 @@ class ExperimentService:
         for r in range(n_rounds):
             t0 = r * round_s
             for j, c in enumerate(self.clients):
-                ph = next((p for p in phases[j]
-                           if p["start_s"] <= t0 < p["end_s"]), None)
+                ph = phase_at(low.phases[j], t0)
                 if ph is None:
                     continue
                 nbytes = max(1, int(ph["req_mb"] * 1e6 * byte_scale))
@@ -423,6 +424,15 @@ class ReplayResult:
             head = seq[:kk]
             shares.append(sum(1 for j in head if j == job) / len(head))
         return float(np.mean(shares)) if shares else float("nan")
+
+
+def _phase_windows(tree) -> list[float]:
+    """Start times of a single-job combinator tree's phases, in order —
+    how the ``.bursts``/``.ramp`` sugar turns its tree into ``.phase``
+    declarations (the windows come from the same expansion ``lower()``
+    would run, so sugar and hand-built trees can't drift apart)."""
+    return [ph["start_s"] for spec in scn_ir.to_jobs(tree)
+            for ph in spec["phases"]]
 
 
 class Experiment:
@@ -602,9 +612,14 @@ class Experiment:
                 f"bursts(): window [{start_s}, {end_s}) is shorter than one "
                 f"{duty * period_s:g} s burst — no phases would be added")
         j = self._job_index(job, "bursts")
-        for i in range(n):
+        # the ON/OFF loop IS shift(repeat(one-burst, n, period)): expand
+        # that combinator tree and declare each resulting window
+        on = scn_ir.leaf(dict(phases=[dict(start_s=0.0,
+                                           duration_s=duty * period_s)]))
+        tree = scn_ir.shift(scn_ir.repeat(on, n, period_s=period_s), start_s)
+        for w in _phase_windows(tree):
             self._add_phase(self.jobs[j], f"job {j}",
-                            start_s=start_s + i * period_s, end_s=None,
+                            start_s=w, end_s=None,
                             duration_s=duty * period_s, req_mb=req_mb,
                             think_s=think_s, arrival=arrival,
                             interval_s=interval_s, rate_hz=rate_hz)
@@ -636,9 +651,17 @@ class Experiment:
 
         j = self._job_index(job, "ramp")
         step_s = duration_s / steps
-        for i in range(steps):
+        # the staircase IS shift(overlay(shift(step, i*step_s)...), start):
+        # same-identity steps merge into one phased job; the lerped
+        # req/think fields ride on each declared window
+        step = scn_ir.leaf(dict(phases=[dict(start_s=0.0,
+                                             duration_s=step_s)]))
+        tree = scn_ir.shift(
+            scn_ir.overlay(*[scn_ir.shift(step, i * step_s)
+                             for i in range(steps)]), start_s)
+        for i, w in enumerate(_phase_windows(tree)):
             self._add_phase(self.jobs[j], f"job {j}",
-                            start_s=start_s + i * step_s, end_s=None,
+                            start_s=w, end_s=None,
                             duration_s=step_s, req_mb=lerp(req_mb, i),
                             think_s=lerp(think_s, i), arrival=arrival,
                             interval_s=interval_s, rate_hz=rate_hz)

@@ -37,6 +37,19 @@ from repro.fs.store import FileSystem
 import jax.numpy as jnp
 
 
+def phase_at(phases, t0: float) -> Optional[dict]:
+    """The resolved phase covering scenario time ``t0``, or ``None``.
+
+    ``phases`` is one job's entry of ``LoweredScenario.phases`` — the
+    canonical lowering (:func:`repro.scenario.lowering.lower`) the
+    engine's ``[J, P]`` arrays are built from.  Scenario replay on this
+    plane walks the *same* lowered form rather than re-deriving phase
+    windows from the raw spec dicts, so the two planes cannot disagree
+    about when a job is live."""
+    return next((p for p in phases
+                 if p["start_s"] <= t0 < p["end_s"]), None)
+
+
 @dataclasses.dataclass
 class JobMeta:
     job_id: int

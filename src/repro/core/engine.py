@@ -73,12 +73,16 @@ from repro.kernels.tick_step import tick_step
 #: tags; clear the list before the region you want to count.
 TRACE_LOG: list = []
 
-#: int32-safe tick horizon: the default ``end_s = 1e9`` ("forever") is 1e12
-#: ticks at dt=1 ms, which overflows the i32 workload arrays (an
-#: ``OverflowError`` on numpy>=2, a silent negative wrap — job never live —
-#: before).  Ticks clamp here instead; ~24 days of 1 ms ticks, far past any
-#: simulated horizon.
-I32_TICK_HORIZON = np.iinfo(np.int32).max
+# The workload-lowering vocabulary now lives in repro.scenario.lowering —
+# the ONE canonical pipeline every construction path funnels through.  The
+# engine re-exports the names (they are part of this module's public API
+# and its tests' import surface); ``make_workload`` below is a consumer of
+# ``lower()``, not an owner of its own dict-normalization.
+from repro.scenario.lowering import (  # noqa: E402  (re-exports)
+    ARRIVAL_CLOSED, ARRIVAL_INTERVAL, ARRIVAL_MODES, ARRIVAL_POISSON,
+    I32_TICK_HORIZON, JOB_SPEC_KEYS, PHASE_SPEC_KEYS, lower_for_config,
+    normalize_phases, validate_job_spec)
+from repro.scenario.lowering import ticks_i32 as _ticks_i32  # noqa: E402,F401
 
 
 def normalize_seed(seed):
@@ -203,121 +207,6 @@ def resolve_tick_impl(cfg: "EngineConfig", sched: Scheduler) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-#: Arrival modes a phase can run in (``Workload.arrival_mode`` codes).
-ARRIVAL_CLOSED, ARRIVAL_INTERVAL, ARRIVAL_POISSON = 0, 1, 2
-ARRIVAL_MODES = {"closed": ARRIVAL_CLOSED, "interval": ARRIVAL_INTERVAL,
-                 "poisson": ARRIVAL_POISSON}
-
-#: The job-spec vocabulary ``make_workload`` (and the Experiment builder /
-#: Scenario JSON) accept.  Anything else is a typo and raises ``TypeError``.
-JOB_SPEC_KEYS = frozenset({
-    "user", "group", "size", "priority", "procs", "req_mb", "start_s",
-    "end_s", "think_s", "servers", "overhead_us", "phases", "arrival",
-    "interval_s", "rate_hz"})
-
-#: Keys accepted inside one entry of a spec's ``phases`` list.
-PHASE_SPEC_KEYS = frozenset({
-    "start_s", "end_s", "duration_s", "req_mb", "think_s", "arrival",
-    "interval_s", "rate_hz"})
-
-
-def validate_job_spec(spec, where: str = "job spec") -> None:
-    """Reject unknown keys with the accepted vocabulary spelled out —
-    the same fail-loudly UX as ``Policy.parse`` on a misspelled policy
-    (``req_md`` must not silently fall back to the 10 MB default)."""
-    if not isinstance(spec, Mapping):
-        raise TypeError(f"{where}: expected a dict, got {type(spec).__name__}")
-    unknown = sorted(set(spec) - JOB_SPEC_KEYS)
-    if unknown:
-        raise TypeError(
-            f"{where}: unknown key(s) {unknown}. Accepted job keys: "
-            f"{sorted(JOB_SPEC_KEYS)}.")
-    for i, ph in enumerate(spec.get("phases") or ()):
-        if not isinstance(ph, Mapping):
-            raise TypeError(f"{where} phase {i}: expected a dict, got "
-                            f"{type(ph).__name__}")
-        bad = sorted(set(ph) - PHASE_SPEC_KEYS)
-        if bad:
-            raise TypeError(
-                f"{where} phase {i}: unknown key(s) {bad}. Accepted phase "
-                f"keys: {sorted(PHASE_SPEC_KEYS)}.")
-
-
-def normalize_phases(spec, where: str = "job spec") -> list[dict]:
-    """Resolve a job spec into its phase list (seconds-domain, defaults
-    applied, validated).
-
-    A flat spec (no ``phases``) is one phase spanning ``start_s..end_s``.
-    Explicit phases inherit the spec's ``req_mb``/``think_s``/arrival
-    fields as defaults, must each carry ``start_s`` plus ``end_s`` or
-    ``duration_s``, must be non-empty, and must not overlap (sorted by
-    start).  Arrival modes: ``closed`` (default), ``interval`` (needs
-    ``interval_s > 0``), ``poisson`` (needs ``rate_hz > 0``).
-    """
-    validate_job_spec(spec, where)
-    base = dict(
-        req_mb=float(spec.get("req_mb", 10.0)),
-        think_s=float(spec.get("think_s", 0.0)),
-        arrival=spec.get("arrival", "closed"),
-        interval_s=spec.get("interval_s"),
-        rate_hz=spec.get("rate_hz"))
-    raw = spec.get("phases")
-    if not raw:
-        raw = [dict(start_s=spec.get("start_s", 0.0),
-                    end_s=spec.get("end_s", 1e9))]
-        explicit = False
-    else:
-        explicit = True
-    out = []
-    for i, ph in enumerate(raw):
-        tag = f"{where} phase {i}"
-        if "start_s" not in ph:
-            raise ValueError(f"{tag}: needs start_s")
-        start = float(ph["start_s"])
-        if "end_s" in ph and "duration_s" in ph:
-            raise ValueError(f"{tag}: give end_s or duration_s, not both")
-        if "duration_s" in ph:
-            end = start + float(ph["duration_s"])
-        elif "end_s" in ph:
-            end = float(ph["end_s"])
-        else:
-            raise ValueError(f"{tag}: needs end_s or duration_s")
-        if explicit and end <= start:
-            raise ValueError(f"{tag}: empty window [{start}, {end})")
-        mode = ph.get("arrival", base["arrival"])
-        if mode not in ARRIVAL_MODES:
-            raise ValueError(
-                f"{tag}: unknown arrival mode {mode!r}; one of "
-                f"{sorted(ARRIVAL_MODES)}")
-        interval_s = ph.get("interval_s", base["interval_s"])
-        rate_hz = ph.get("rate_hz", base["rate_hz"])
-        if mode == "interval" and not (interval_s and float(interval_s) > 0):
-            raise ValueError(f"{tag}: arrival='interval' needs interval_s > 0")
-        if mode == "poisson" and not (rate_hz and float(rate_hz) > 0):
-            raise ValueError(f"{tag}: arrival='poisson' needs rate_hz > 0")
-        if out:
-            prev_end = out[-1]["end_s"]
-            # ulp tolerance: bursts()/ramp() accumulate starts and ends by
-            # different float paths, so a contiguous boundary can differ by
-            # rounding; only a *material* overlap is an error.
-            tol = 1e-9 * max(1.0, abs(prev_end))
-            if start < prev_end - tol:
-                raise ValueError(
-                    f"{tag}: starts at {start} inside the previous phase "
-                    f"(ends {prev_end}); phases must be sorted and "
-                    f"non-overlapping")
-            if start < prev_end:
-                start = prev_end          # snap ulp-gaps to exact contiguity
-        out.append(dict(
-            start_s=start, end_s=end,
-            req_mb=float(ph.get("req_mb", base["req_mb"])),
-            think_s=float(ph.get("think_s", base["think_s"])),
-            arrival=mode,
-            interval_s=float(interval_s) if interval_s else 0.0,
-            rate_hz=float(rate_hz) if rate_hz else 0.0))
-    return out
-
-
 class Workload(NamedTuple):
     """Phased client population (static over a run).
 
@@ -385,67 +274,33 @@ class EngineState(NamedTuple):
     dropped: jnp.ndarray      # i32[] arrivals rejected by full rings
 
 
-def _ticks_i32(seconds: float, dt: float) -> int:
-    """Seconds -> ticks, clamped to the int32-safe horizon."""
-    return int(min(round(seconds / dt), I32_TICK_HORIZON))
-
-
 def make_workload(
     cfg: EngineConfig,
     jobs: Sequence[dict],
 ) -> tuple[Workload, JobTable]:
-    """Build a phased workload + job table from job spec dicts.
+    """Build a phased workload + job table from any scenario source.
 
-    Keys per job (see :data:`JOB_SPEC_KEYS`; unknown keys are a
-    ``TypeError``): user, group, size (nodes), priority, procs (total client
-    processes), req_mb, start_s, end_s, think_s, servers (list of server ids
-    the job's files live on; default all), overhead_us, arrival /
-    interval_s / rate_hz (arrival mode of the flat window), and ``phases``
-    — a list of :data:`PHASE_SPEC_KEYS` dicts that replaces the flat
-    single window with an explicit scenario (checkpoint bursts, ramps,
-    idle gaps).  A spec without ``phases`` lowers to ``P = 1`` and runs
-    bit-identically to the pre-scenario engine.
+    ``jobs`` is whatever :func:`repro.scenario.lowering.lower` accepts —
+    a list of job spec dicts (see :data:`JOB_SPEC_KEYS`; unknown keys are
+    a ``TypeError``), a ``Scenario``, or a combinator tree.  This is a
+    thin consumer of the one canonical lowering pipeline: ``lower()``
+    builds the validated ``[J, P]`` numpy arrays for ``cfg``'s geometry
+    and this function wraps them into the jitted :class:`Workload` plus
+    the job table.  A spec without ``phases`` lowers to ``P = 1`` and
+    runs bit-identically to the pre-scenario engine.
     """
-    jobs = list(jobs)
-    s_, j_ = cfg.n_servers, cfg.max_jobs
-    per_job = [normalize_phases(spec, f"job {j}") for j, spec in
-               enumerate(jobs)]
-    p_ = max([1] + [len(ph) for ph in per_job])
-    start = np.zeros((j_, p_), np.int32)
-    end = np.zeros((j_, p_), np.int32)
-    req = np.ones((j_, p_), np.float32)
-    think = np.zeros((j_, p_), np.int32)
-    mode = np.zeros((j_, p_), np.int32)
-    every = np.ones((j_, p_), np.int32)
-    rate = np.zeros((j_, p_), np.float32)
-    procs = np.zeros((s_, j_), np.int32)
-    over = np.zeros((j_,), np.float32)
-    for j, (spec, phases) in enumerate(zip(jobs, per_job)):
-        for k, ph in enumerate(phases):
-            start[j, k] = _ticks_i32(ph["start_s"], cfg.dt)
-            end[j, k] = _ticks_i32(ph["end_s"], cfg.dt)
-            req[j, k] = ph["req_mb"] * 1e6
-            think[j, k] = _ticks_i32(ph["think_s"], cfg.dt)
-            mode[j, k] = ARRIVAL_MODES[ph["arrival"]]
-            every[j, k] = max(1, _ticks_i32(ph["interval_s"], cfg.dt))
-            rate[j, k] = ph["rate_hz"] * cfg.dt
-        servers = spec.get("servers", list(range(s_)))
-        total_procs = int(spec.get("procs", spec.get("size", 1) * 56))
-        share = np.zeros((s_,), np.int64)
-        for i, sv in enumerate(servers):
-            share[sv] += total_procs // len(servers) + (1 if i < total_procs % len(servers) else 0)
-        procs[:, j] = share
-        over[j] = float(spec.get("overhead_us", 0.0)) * 1e-6
-        if share.max() > cfg.ring_cap:
-            raise ValueError(f"job {j}: {share.max()} procs on one server > ring_cap {cfg.ring_cap}")
+    low = lower_for_config(jobs, cfg)
     wl = Workload(
-        phase_start=jnp.asarray(start), phase_end=jnp.asarray(end),
-        phase_req=jnp.asarray(req), phase_think=jnp.asarray(think),
-        arrival_mode=jnp.asarray(mode), arrival_every=jnp.asarray(every),
-        arrival_rate=jnp.asarray(rate),
-        procs=jnp.asarray(procs), overhead_s=jnp.asarray(over),
+        phase_start=jnp.asarray(low.phase_start),
+        phase_end=jnp.asarray(low.phase_end),
+        phase_req=jnp.asarray(low.phase_req),
+        phase_think=jnp.asarray(low.phase_think),
+        arrival_mode=jnp.asarray(low.arrival_mode),
+        arrival_every=jnp.asarray(low.arrival_every),
+        arrival_rate=jnp.asarray(low.arrival_rate),
+        procs=jnp.asarray(low.procs), overhead_s=jnp.asarray(low.overhead_s),
     )
-    return wl, make_table(jobs, max_jobs=j_)
+    return wl, make_table(low.jobs, max_jobs=cfg.max_jobs)
 
 
 def init_state(cfg: EngineConfig, n_bins: int) -> EngineState:

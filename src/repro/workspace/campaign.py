@@ -6,9 +6,12 @@ keys every point of an ``Experiment.sweep`` grid on
     (section="sweep", name=<campaign>, scheduler, params_hash,
      scenario_hash, env)
 
-where ``scenario_hash`` (:func:`spec_hash`) canonically hashes the declared
-jobs, the engine geometry, the horizon, and the seed set — so a record can
-only ever be reused for the *identical* computation.  On every run it:
+where ``scenario_hash`` (:func:`spec_hash`) canonically hashes the *lowered*
+scenario (the canonical ``[J, P]`` arrays, via the bit-identical ndarray
+codec — not the raw job-dict JSON), the engine geometry, the horizon, and
+the seed set — so a record can only ever be reused for the *identical*
+computation, while equivalent spellings of one workload share keys.  On
+every run it:
 
 1. looks each grid point up in the store (journal lines survive a
    ``SIGKILL`` mid-campaign — the journal appends whole fsynced lines and
@@ -38,7 +41,7 @@ import numpy as np
 
 from repro.workspace.store import (RunKey, RunRecord, WorkspaceStore,
                                    canonical_json, content_hash,
-                                   env_fingerprint)
+                                   encode_payload, env_fingerprint)
 
 
 class CampaignInterrupted(RuntimeError):
@@ -68,12 +71,30 @@ def _jsonable(value):
         return repr(value)
 
 
+def _scenario_doc(exp) -> dict:
+    """The workload part of :func:`spec_hash`: the *lowered canonical*
+    ``[J, P]`` arrays (through the bit-identical ndarray codec), not the
+    raw job-dict JSON.  Two spellings of the same scenario — a combinator
+    tree and its hand-built flat equivalent, a ``.bursts`` loop and its
+    explicit phase list — lower to the same arrays and therefore share
+    cache/campaign keys; a semantic change (one tick of one phase) always
+    re-keys.
+
+    Migration note: this changed the hash inputs in PR 9, so records
+    written by earlier stores miss once and recompute — old journals stay
+    readable, their entries just no longer match any new key."""
+    from repro.scenario.lowering import lower_for_config
+    low = lower_for_config(exp.jobs, exp.engine_config())
+    return encode_payload(low.canonical())
+
+
 def spec_hash(exp, seconds, seeds) -> str:
     """Canonical hash of everything that determines a sweep lane's bits
-    besides the swept params point: jobs, geometry, policy, base seed,
-    engine overrides, horizon, and seed set."""
+    besides the swept params point: the lowered scenario (canonical
+    ``[J, P]`` arrays — see :func:`_scenario_doc`), geometry, policy,
+    base seed, engine overrides, horizon, and seed set."""
     doc = {
-        "jobs": exp.jobs,
+        "scenario": _scenario_doc(exp),
         "scheduler": exp.scheduler,
         "policy": (exp.policy.name or None) if exp.policy else None,
         "n_servers": exp.n_servers,

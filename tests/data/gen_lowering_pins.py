@@ -1,0 +1,102 @@
+"""Regenerate ``lowering_pins.json`` — the saved [J, P] lowering traces.
+
+The fixture pins the canonical arrays every construction path lowered to
+*before* the scenario-combinator refactor (PR 9): flat specs, ``.phase`` /
+``.bursts`` / ``.ramp`` sugar, the preset library, and the trace importer.
+``tests/test_scenario.py::TestLoweringPins`` asserts today's single
+``lower()`` pipeline still produces these exact bytes.
+
+Run from the repo root (only to *intentionally* re-pin after a semantic
+change — an unintentional diff here is a lowering regression):
+
+    PYTHONPATH=src python tests/data/gen_lowering_pins.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+import numpy as np  # noqa: E402
+
+from repro.api import Experiment  # noqa: E402
+from repro.workspace.store import canonical_json, encode_payload  # noqa: E402
+
+ARRAY_FIELDS = ("phase_start", "phase_end", "phase_req", "phase_think",
+                "arrival_mode", "arrival_every", "arrival_rate",
+                "procs", "overhead_s")
+
+
+def workload_arrays(exp):
+    _, wl, _ = exp.build()
+    return {f: np.asarray(getattr(wl, f)) for f in ARRAY_FIELDS}
+
+
+def trace_records():
+    recs = [dict(rank=r, user=0, start_s=0.00 + 0.002 * r,
+                 end_s=0.05 + 0.002 * r, bytes=8e6, op="write")
+            for r in range(4)]
+    recs += [dict(rank=r, user=0, start_s=0.30, end_s=0.35,
+                  bytes=4e6, op="write") for r in range(4)]
+    recs.append(dict(rank=0, user=3, start_s=0.0, end_s=0.4,
+                     bytes=2e6, op="read"))
+    return recs
+
+
+def experiments():
+    from repro.scenario import Scenario, presets
+    cases = {}
+    cases["flat"] = (Experiment(policy="job-fair", n_workers=2)
+                     .add_job(user=0, procs=6, req_mb=10, start_s=0.1,
+                              end_s=0.8, think_s=0.02)
+                     .add_job(user=1, procs=4, req_mb=4, end_s=0.7))
+    cases["phase-sugar"] = (Experiment(policy="job-fair", n_workers=2)
+                            .add_job(user=0, procs=6, req_mb=10)
+                            .phase(start_s=0.0, end_s=0.3)
+                            .phase(start_s=0.3, end_s=0.8, req_mb=2.0))
+    cases["bursts-n"] = (Experiment(policy="job-fair", n_workers=2)
+                         .add_job(user=0, procs=4, req_mb=5, end_s=0.6)
+                         .add_job(user=1, procs=4, req_mb=2)
+                         .bursts(period_s=0.3, duty=0.5, n=2))
+    cases["bursts-end-s"] = (Experiment(policy="job-fair", n_workers=2)
+                             .add_job(user=0, procs=4)
+                             .bursts(period_s=4.0, duty=0.25, end_s=10.0))
+    cases["bursts-offset"] = (Experiment(policy="job-fair", n_workers=2)
+                              .add_job(user=0, procs=4, req_mb=3)
+                              .bursts(period_s=0.1, duty=1.0, n=20,
+                                      start_s=0.3))
+    cases["ramp"] = (Experiment(policy="job-fair", n_workers=2)
+                     .add_job(user=0, procs=4, think_s=0.01)
+                     .ramp(start_s=0.2, duration_s=1.2, steps=4,
+                           req_mb=(1.0, 9.0), think_s=(0.0, 0.03)))
+    cases["arrival-modes"] = (Experiment(policy="job-fair", n_workers=2)
+                              .add_job(user=0, procs=4, req_mb=1, end_s=1.0,
+                                       arrival="interval", interval_s=0.05)
+                              .add_job(user=1, procs=4, req_mb=1, end_s=1.0,
+                                       arrival="poisson", rate_hz=20.0)
+                              .add_job(user=2, procs=4, req_mb=2,
+                                       overhead_us=15.0, end_s=0.5))
+    for name, scn in presets().items():
+        cases[f"preset-{name}"] = Experiment.from_scenario(
+            scn, policy="job-fair", n_workers=2)
+    trace = Scenario.from_trace(trace_records(), name="pin-trace")
+    cases["trace-import"] = Experiment.from_scenario(
+        trace, policy="job-fair", n_workers=2)
+    return cases
+
+
+def main():
+    out = {}
+    for name, exp in experiments().items():
+        out[name] = {"jobs": exp.jobs,
+                     "arrays": encode_payload(workload_arrays(exp))}
+    path = os.path.join(os.path.dirname(__file__), "lowering_pins.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    digest = canonical_json({k: v["arrays"] for k, v in out.items()})
+    print(f"wrote {path}: {len(out)} cases, {len(digest)} canonical bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -546,8 +546,20 @@ class TestPresets:
     def test_presets_are_fresh_copies(self):
         from repro.scenario import preset
         a = preset("bursty-interferer")
-        a.jobs[0]["req_mb"] = 999
-        assert preset("bursty-interferer").jobs[0]["req_mb"] != 999
+        a.jobs[0]["procs"] = 999
+        assert preset("bursty-interferer").jobs[0]["procs"] != 999
+
+    def test_presets_are_fresh_at_depth(self):
+        # nested mutation must not poison the library either: phase dicts
+        # are materialized fresh by tree expansion on every call
+        from repro.scenario import preset, presets
+        a = presets()["bursty-interferer"]
+        a.jobs[1]["phases"][0]["req_mb"] = 999
+        b = presets()["bursty-interferer"]
+        assert b.jobs[1]["phases"][0]["req_mb"] != 999
+        c = preset("bursty-interferer")
+        c.tree.children[0].jobs[0]["procs"] = 999  # even the tree's leaves
+        assert preset("bursty-interferer").jobs[0]["procs"] != 999
 
     def test_preset_runs_from_experiment(self):
         from repro.scenario import preset
@@ -555,3 +567,181 @@ class TestPresets:
                                        policy="job-fair", n_workers=2)
         res = exp.run(0.4)
         assert res.n_jobs == 2 and float(np.sum(res.gbps)) > 0
+
+
+class TestLoweringPins:
+    """PR-9 acceptance: every construction path — flat specs, the
+    ``.phase/.bursts/.ramp`` sugar, the preset library (now combinator
+    trees), the trace importer — lowers **bit-identically** to the
+    ``[J, P]`` arrays saved before the refactor
+    (``tests/data/lowering_pins.json``; regenerate only intentionally via
+    ``tests/data/gen_lowering_pins.py``)."""
+
+    @pytest.fixture(scope="class")
+    def pins(self):
+        import json
+        from repro.workspace.store import decode_payload
+        path = os.path.join(os.path.dirname(__file__), "data",
+                            "lowering_pins.json")
+        with open(path) as f:
+            doc = json.load(f)
+        return {name: decode_payload(case["arrays"])
+                for name, case in doc.items()}
+
+    @pytest.fixture(scope="class")
+    def cases(self):
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "data"))
+        try:
+            import gen_lowering_pins as gen
+            return gen.experiments()
+        finally:
+            sys.path.pop(0)
+
+    ARRAY_FIELDS = ("phase_start", "phase_end", "phase_req", "phase_think",
+                    "arrival_mode", "arrival_every", "arrival_rate",
+                    "procs", "overhead_s")
+
+    def test_every_path_lowers_bit_identically(self, pins, cases):
+        assert set(pins) == set(cases)
+        for name, exp in cases.items():
+            _, wl, _ = exp.build()
+            for f in self.ARRAY_FIELDS:
+                want = np.asarray(pins[name][f])
+                got = np.asarray(getattr(wl, f))
+                assert want.dtype == got.dtype and want.shape == got.shape, \
+                    (name, f, want.dtype, got.dtype, want.shape, got.shape)
+                assert (want == got).all(), (name, f)
+
+    @pytest.mark.parametrize("scheduler", SCHEDULERS)
+    def test_preset_trees_pin_across_schedulers(self, pins, scheduler):
+        # the lowering is scheduler-independent: every registered
+        # scheduler sees the same pinned arrays for the tree-built presets
+        from repro.scenario import presets
+        for name, scn in presets().items():
+            exp = Experiment.from_scenario(scn, policy="job-fair",
+                                           scheduler=scheduler, n_workers=2)
+            _, wl, _ = exp.build()
+            for f in self.ARRAY_FIELDS:
+                assert (np.asarray(pins[f"preset-{name}"][f])
+                        == np.asarray(getattr(wl, f))).all(), \
+                    (scheduler, name, f)
+
+    def test_canonical_form_is_spelling_independent(self):
+        from repro.scenario.lowering import lower
+        from repro.workspace.store import content_hash, encode_payload
+        sugar = (Experiment().add_job(user=0, procs=4, req_mb=5, end_s=0.6)
+                 .bursts(period_s=0.3, duty=0.5, n=2))
+        flat = Experiment().add_job(
+            user=0, procs=4, req_mb=5, end_s=0.6,
+            phases=[dict(start_s=0.0, duration_s=0.15),
+                    dict(start_s=0.3, duration_s=0.15)])
+        h = [content_hash(encode_payload(
+                lower(e.jobs, dt=1e-3, n_servers=1, max_jobs=2).canonical()))
+             for e in (sugar, flat)]
+        assert h[0] == h[1]
+
+
+class TestCombinators:
+    """The combinator algebra: trees expand, serialize, and lower through
+    the one pipeline (deeper law-level properties live in
+    ``tests/test_fuzz_scenarios.py``)."""
+
+    def _tree(self):
+        from repro.scenario import concat, leaf, mask, mix, overlay, repeat
+        frag = leaf(dict(user=0, procs=4, req_mb=2,
+                         phases=[dict(start_s=0.0, duration_s=0.1)]))
+        other = leaf(dict(user=1, procs=4, req_mb=1, end_s=0.3))
+        third = leaf(dict(user=2, procs=4, req_mb=1, end_s=0.2))
+        return overlay(
+            repeat(frag, 3, period_s=0.2),
+            mask(other, start_s=0.1, end_s=0.25),
+            mix(concat(third, third, gap_s=0.05), third, seed=7))
+
+    def test_tree_scenario_json_roundtrip(self):
+        scn = Scenario(tree=self._tree(), name="combo")
+        doc = scn.to_json()
+        assert '"version": 2' in doc and '"tree"' in doc
+        again = Scenario.from_json(doc)
+        assert again.jobs == scn.jobs and again.name == "combo"
+        # and the round-trip lowers identically, not just spells identically
+        a = Experiment.from_scenario(scn, n_workers=2).build()[1]
+        b = Experiment.from_scenario(again, n_workers=2).build()[1]
+        assert (np.asarray(a.phase_start) == np.asarray(b.phase_start)).all()
+
+    def test_jobs_scenarios_still_write_version_1(self):
+        scn = Scenario(jobs=[dict(user=0, end_s=1.0)], name="flat")
+        assert '"version": 1' in scn.to_json()
+        assert Scenario.from_json(scn.to_json()).jobs == scn.jobs
+
+    def test_future_version_names_supported_versions(self):
+        with pytest.raises(ValueError, match=r"version 3.*supported versions.*\[1, 2\]"):
+            Scenario.from_json('{"version": 3, "jobs": []}')
+
+    def test_unknown_op_lists_vocabulary(self):
+        with pytest.raises(ValueError, match=r"swithc.*Accepted ops.*overlay"):
+            Scenario.from_json(
+                '{"version": 2, "tree": {"op": "swithc", "children": []}}')
+
+    def test_operator_sugar(self):
+        from repro.scenario import leaf, to_jobs
+        a = leaf(dict(user=0, procs=4, end_s=0.1))
+        b = leaf(dict(user=1, procs=4, end_s=0.1))
+        assert len(to_jobs(a | b)) == 2            # overlay
+        seq = to_jobs(a >> a)                      # concat merges identities
+        assert len(seq) == 1 and len(seq[0]["phases"]) == 2
+
+    def test_open_ended_fragment_rejected_by_repeat_and_concat(self):
+        from repro.scenario import concat, leaf, repeat
+        endless = leaf(dict(user=0, procs=4))      # no end_s -> open
+        with pytest.raises(ValueError, match="open-ended"):
+            to_jobs_ = __import__("repro.scenario", fromlist=["to_jobs"])
+            to_jobs_.to_jobs(repeat(endless, 2))
+        with pytest.raises(ValueError, match="open-ended"):
+            to_jobs_.to_jobs(concat(endless, endless))
+
+    def test_mix_is_seed_deterministic(self):
+        from repro.scenario import leaf, mix, to_jobs
+        a = leaf(dict(user=0, procs=4, end_s=0.1))
+        b = leaf(dict(user=1, procs=4, end_s=0.1))
+        picks = {s: to_jobs(mix(a, b, seed=s))[0]["user"] for s in range(16)}
+        assert picks == {s: to_jobs(mix(a, b, seed=s))[0]["user"]
+                         for s in range(16)}       # stable across calls
+        assert set(picks.values()) == {0, 1}       # both arms reachable
+        heavy = to_jobs(mix(a, b, seed=3, weights=(0.0, 1.0)))
+        assert heavy[0]["user"] == 1               # zero weight never picked
+
+    def test_scenario_rejects_jobs_and_tree_together(self):
+        from repro.scenario import leaf
+        with pytest.raises(ValueError, match="not both"):
+            Scenario(jobs=[dict(user=0)], tree=leaf(dict(user=0)))
+
+
+class TestTraceKnobValidation:
+    """Satellite: ``from_trace`` knobs fail at entry, Accepted-fields
+    style, before any record is parsed."""
+
+    def test_bad_mode_lists_accepted_modes(self):
+        with pytest.raises(ValueError, match=r"warp.*Accepted modes.*interval"):
+            Scenario.from_trace([dict(start_s=0, end_s=1)], mode="warp")
+
+    def test_nonpositive_time_scale(self):
+        with pytest.raises(ValueError, match="time_scale must be > 0"):
+            Scenario.from_trace([dict(start_s=0, end_s=1)], time_scale=-1.0)
+
+    def test_nonpositive_gap(self):
+        with pytest.raises(ValueError, match="gap_s must be > 0"):
+            Scenario.from_trace([dict(start_s=0, end_s=1)], gap_s=0.0)
+
+    def test_nonpositive_min_phase(self):
+        with pytest.raises(ValueError, match="min_phase_s must be > 0"):
+            Scenario.from_trace([dict(start_s=0, end_s=1)], min_phase_s=0)
+
+    def test_knobs_fail_before_records_are_read(self):
+        # a bad knob reports the knob, not the (also-broken) records
+        with pytest.raises(ValueError, match="time_scale"):
+            Scenario.from_trace([dict(bogus=1)], time_scale=0)
+
+    def test_empty_trace_still_reports_no_records(self):
+        with pytest.raises(ValueError, match="no records"):
+            Scenario.from_trace([])

@@ -9,8 +9,8 @@ Two independent checks, both offline:
    spaces to hyphens).
 
 2. **Blocks** (``--run-blocks`` to run just this): the fenced ``python``
-   blocks in docs/architecture.md and docs/workspace.md execute
-   top-to-bottom in one shared namespace per page — the pages promise they
+   blocks in docs/architecture.md, docs/scenarios.md and docs/workspace.md
+   execute top-to-bottom in one shared namespace per page — the pages promise they
    are live, this enforces it.  Shrink the simulated horizons with
    ``EXAMPLE_SECONDS`` (CI uses 2).
 
@@ -28,6 +28,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 BLOCK_PAGES = [REPO / "docs" / "architecture.md",
+               REPO / "docs" / "scenarios.md",
                REPO / "docs" / "workspace.md"]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
