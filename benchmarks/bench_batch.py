@@ -1,0 +1,94 @@
+"""Batch-plane benchmarks: waiting-time objectives per queue preset.
+
+The paper's upstream claim (via Kopanski & Rzadca, arXiv:2109.00082):
+when burst-buffer reservations contend, plan-based scheduling beats both
+FCFS and EASY backfilling on waiting time.  One row pair per (queue
+preset × batch policy):
+
+  * ``batch_{preset}_{policy}_meanwait_s`` / ``_p95wait_s`` — trend-gated
+    lower-is-better (see ``benchmarks/trend.py``: ``wait`` rows gate like
+    ``std``/``_us_`` rows);
+  * ``batch_{preset}_plan_vs_fcfs`` / ``_plan_vs_easy`` — ungated ratio
+    rows (<1 = plan waits less): the headline comparison;
+  * ``batch_bridge_themis_gbps`` — the admitted bb-heavy plan timeline
+    lowered through the scenario bridge and run on the serving plane
+    (gated higher-is-better), so the end-to-end path has a trend line.
+
+Waits are averaged over ``BENCH_SEEDS`` queue/annealing seeds; every seed
+regenerates the preset *and* reseeds the annealer, so the mean covers both
+sources of variation while each seed's plan stays bit-deterministic (the
+determinism itself is pinned by ``tests/test_batch.py``).  Shrink knobs:
+``BENCH_BATCH_JOBS`` (queue length, default 24) and ``BENCH_BATCH_STEPS``
+(SA steps, default 300) — both fold into the trend env key.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.batch import BatchExperiment, PlanOptParams
+
+from .common import RUN_LOG, bench_seconds, bench_seeds, simulate
+
+PRESETS = ("bb-heavy", "longtail", "mixed")
+POLICIES = ("fcfs", "easy", "plan")
+
+
+def _n_jobs() -> int:
+    return int(os.environ.get("BENCH_BATCH_JOBS", "24"))
+
+
+def _params() -> PlanOptParams:
+    return PlanOptParams(
+        sa_steps=int(os.environ.get("BENCH_BATCH_STEPS", "300")))
+
+
+def run_batch() -> list[tuple]:
+    rows = []
+    params = _params()
+    seeds = bench_seeds(tuple(range(4)))
+    bridge_exp = None
+    for preset in PRESETS:
+        t0 = time.time()
+        waits = {pol: [] for pol in POLICIES}
+        p95s = {pol: [] for pol in POLICIES}
+        for seed in seeds:
+            bx = BatchExperiment(preset, n_jobs=_n_jobs(), seed=seed,
+                                 params=params)
+            for pol, res in bx.compare(seed=seed).items():
+                waits[pol].append(res.mean_wait_s)
+                p95s[pol].append(res.p95_wait_s)
+                if (preset, pol, seed) == ("bb-heavy", "plan", seeds[0]):
+                    bridge_exp = bx.to_experiment(res, scheduler="themis")
+        us = (time.time() - t0) * 1e6 / max(1, len(seeds) * len(POLICIES))
+        mean = {pol: sum(w) / len(w) for pol, w in waits.items()}
+        p95 = {pol: sum(w) / len(w) for pol, w in p95s.items()}
+        tag = preset.replace("-", "")
+        for pol in POLICIES:
+            # rows attribute to the batch policy name; params hash applies
+            # to plan (the annealer's schema), "" for the baselines
+            RUN_LOG.append({
+                "scheduler": pol,
+                "params_hash": params.params_hash() if pol == "plan" else "",
+                "dropped": 0, "idle_worker_ticks": 0,
+                "seconds": float(mean[pol])})
+            rows.append((f"batch_{tag}_{pol}_meanwait_s", f"{us:.0f}",
+                         f"{mean[pol]:.1f} ({len(seeds)} seeds)"))
+            rows.append((f"batch_{tag}_{pol}_p95wait_s", f"{us:.0f}",
+                         f"{p95[pol]:.1f}"))
+        for base in ("fcfs", "easy"):
+            rows.append((f"batch_{tag}_plan_vs_{base}", f"{us:.0f}",
+                         f"{mean['plan'] / max(mean[base], 1e-9):.3f}x "
+                         f"mean wait (<1 = plan waits less)"))
+
+    # the admitted plan timeline, end-to-end through the serving plane
+    exp, horizon = bridge_exp
+    horizon = min(horizon, bench_seconds(8.0))
+    t0 = time.time()
+    res, _cfg = simulate("themis", exp.jobs, horizon, policy="job-fair",
+                         n_servers=exp.n_servers, max_jobs=exp.max_jobs)
+    us = (time.time() - t0) * 1e6
+    gbps = res.mean_gbps(None, 0.05 * horizon, horizon)
+    rows.append(("batch_bridge_themis_gbps", f"{us:.0f}",
+                 f"{gbps:.2f} (bb-heavy plan timeline, {res.n_jobs} jobs)"))
+    return rows

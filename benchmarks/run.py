@@ -24,6 +24,7 @@ artifact.
 import sys
 
 from .bench_apps import run_fig13
+from .bench_batch import run_batch
 from .bench_comparison import run_fig12
 from .bench_composite import run_fig9_11
 from .bench_fleet import run_fleet
@@ -36,6 +37,7 @@ from .bench_tick import run_kern
 from .common import bench_env, drain_run_log, emit
 
 SECTIONS = {
+    "batch": run_batch,
     "fig7": run_fig7,
     "fig8": run_fig8,
     "fig9": run_fig9_11,
@@ -50,9 +52,14 @@ SECTIONS = {
 
 #: ``--list`` schema: section -> row-name patterns it emits.  ``{...}`` marks
 #: the ladder/variant axis; trend-gate direction comes from the row name
-#: (see benchmarks/trend.py: ``_vs_``/``budget`` ungated, ``_us_``/``std``
-#: lower-better, ``gbps``/``jain``/``speedup`` higher-better).
+#: (see benchmarks/trend.py: ``_vs_``/``budget`` ungated, ``_us_``/``std``/
+#: ``wait``/``bsld`` lower-better, ``gbps``/``jain``/``speedup``
+#: higher-better).
 ROW_SCHEMAS = {
+    "batch": ["batch_{preset}_{policy}_meanwait_s",
+              "batch_{preset}_{policy}_p95wait_s",
+              "batch_{preset}_plan_vs_{baseline}",
+              "batch_bridge_{sched}_gbps"],
     "fig7": ["fig7_{sched}_{n}srv_gbps", "fig7_paper_reference"],
     "fig8": ["fig8_{policy}_{job}_gbps", "fig8_{policy}_jain"],
     "fig9": ["fig9_{policy}_{phase}_gbps", "fig11_{policy}_drain_s"],

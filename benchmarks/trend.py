@@ -93,8 +93,11 @@ def extract_points(doc: dict, label: str) -> list[dict]:
                 "name": row["name"],
                 "value": value,
                 "us_per_call": parse_value(row.get("us_per_call")),
-                "scheduler": run.get("scheduler"),
-                "params_hash": run.get("params_hash"),
+                "scheduler": run.get("scheduler") or None,
+                # "" (a param-less scheduler's attribution) and missing
+                # both normalize to None, so the artifact and workspace
+                # ingest paths key the same row into the same series
+                "params_hash": run.get("params_hash") or None,
                 "dropped": run.get("dropped"),
                 "idle_worker_ticks": run.get("idle_worker_ticks"),
                 "env": env,
@@ -153,6 +156,8 @@ def direction(name: str) -> Optional[int]:
         return None   # ratios of gated quantities / analytic constants
     if "std" in name:
         return -1
+    if "wait" in name or "bsld" in name:
+        return -1     # waiting-time objectives (batch plane)
     if "speedup" in name:
         return +1
     if "gbps" in name or "jain" in name:
@@ -164,7 +169,10 @@ def direction(name: str) -> Optional[int]:
 
 def trend_table(history: dict) -> str:
     lines = ["key,params_hash,env,trend,delta_pct"]
-    for key, pts in sorted(_series(history).items()):
+    # None params_hash sorts as "" so mixed attributed/unattributed series
+    # (e.g. an old history written before "" normalized to None) still print
+    for key, pts in sorted(_series(history).items(),
+                           key=lambda kv: tuple(x or "" for x in kv[0])):
         section, name, phash, env = key
         vals = [p["value"] for p in pts]
         trail = " -> ".join(f"{v:g}" for v in vals[-6:])

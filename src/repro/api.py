@@ -737,6 +737,21 @@ class Experiment:
             scenario = Scenario.from_json(scenario)
         return cls(**kw).add_jobs(copy.deepcopy(scenario.jobs))
 
+    @staticmethod
+    def batch(queue="bb-heavy", **kw) -> "BatchExperiment":
+        """The batch plane's facade (:class:`repro.batch.BatchExperiment`):
+        a queue of jobs with node + burst-buffer *reservations* scheduled by
+        FCFS / EASY backfilling / plan-based annealing, whose admitted
+        timeline bridges back into an :class:`Experiment` via
+        ``to_experiment`` (see docs/batch.md)::
+
+            bx = Experiment.batch("bb-heavy", n_jobs=24)
+            res = bx.run("plan")
+            exp, horizon = bx.to_experiment(res, scheduler="themis")
+        """
+        from repro.batch.api import BatchExperiment
+        return BatchExperiment(queue, **kw)
+
     # -- compilation ---------------------------------------------------------
     def _slots(self) -> int:
         return self.max_jobs if self.max_jobs else max(8, len(self.jobs))
@@ -926,3 +941,14 @@ class Experiment:
             for j, spec in enumerate(self.jobs)]
         return ExperimentService(cluster=cluster, clients=clients,
                                  jobs=copy.deepcopy(self.jobs))
+
+
+# Batch-plane facade re-export: ``from repro.api import BatchExperiment``
+# works just like ``Experiment`` (the import sits at module bottom because
+# repro.batch's bridge builds Experiments).
+from repro.batch.api import BatchExperiment, BatchResult  # noqa: E402
+
+__all__ = [
+    "Experiment", "BatchExperiment", "BatchResult", "ExperimentService",
+    "RunResult", "BatchRunResult", "SweepResult", "ReplayResult",
+]

@@ -1,0 +1,32 @@
+"""repro.batch — the third plane: HPC batch scheduling with BB reservations.
+
+Upstream of the serving planes: a batch queue of jobs carrying (nodes,
+walltime, burst-buffer reservation) demands, a cluster reusing the engine's
+server geometry, and three admission policies — FCFS, EASY backfilling, and
+Kopanski & Rzadca's plan-based scheduling with simulated annealing
+(arXiv:2109.00082 / 2111.10200) — compared on the waiting-time and
+bounded-slowdown objectives.  The bridge lowers any admitted timeline into
+the :mod:`repro.scenario` combinator algebra so the serving planes replay
+exactly what the batch plane admitted.  See docs/batch.md.
+"""
+from repro.batch.api import (BATCH_POLICIES, BatchExperiment, BatchResult)
+from repro.batch.bridge import (DEFAULT_HORIZON_S, timeline_to_tree,
+                                to_experiment, to_scenario)
+from repro.batch.campaign import batch_point_key, run_batch_campaign
+from repro.batch.plan import plan_schedule
+from repro.batch.queue import (BatchJob, BatchQueue, ClusterSpec, make_queue,
+                               queue_preset, queue_presets)
+from repro.batch.sim import (BSLD_TAU_S, schedule_order, simulate_easy,
+                             simulate_fcfs, validate_schedule, wait_metrics)
+from repro.core.params import PlanOptParams
+
+__all__ = [
+    "BatchExperiment", "BatchResult", "BatchJob", "BatchQueue",
+    "ClusterSpec", "PlanOptParams", "BATCH_POLICIES", "BSLD_TAU_S",
+    "DEFAULT_HORIZON_S",
+    "make_queue", "queue_preset", "queue_presets",
+    "schedule_order", "simulate_fcfs", "simulate_easy", "plan_schedule",
+    "wait_metrics", "validate_schedule",
+    "timeline_to_tree", "to_scenario", "to_experiment",
+    "batch_point_key", "run_batch_campaign",
+]

@@ -1,0 +1,109 @@
+"""Plan-based scheduling: simulated annealing over job orderings.
+
+Kopanski & Rzadca (arXiv:2109.00082, thesis 2111.10200): instead of
+dispatching greedily, build an **execution plan** — an ordering of the
+queued jobs with node + burst-buffer reservations — over a lookahead
+window, and improve it with simulated annealing against the waiting-time
+objective.  Here the plan is a permutation; its value is the mean wait of
+the reservation-aware list schedule it induces
+(:func:`repro.batch.sim.schedule_order`, the jitted evaluator).
+
+The annealer is one ``lax.scan`` of ``sa_steps`` Metropolis steps, vmapped
+over ``sa_restarts`` independent proposal streams, all keyed through the
+engine's PRNG discipline (:func:`repro.core.engine.prng_key` +
+``fold_in``): the same seed always yields the bit-identical plan, different
+seeds yield different search paths but always *feasible* schedules — the
+evaluator never produces an infeasible start, so annealing can only trade
+waiting time, never correctness.  Knobs live in the frozen
+:class:`repro.core.params.PlanOptParams` schema (``sa_steps``/
+``sa_restarts`` are structural — they set the scan length/width).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.batch.queue import BatchQueue
+from repro.batch.sim import arrival_order, schedule_order
+from repro.core.engine import prng_key
+from repro.core.params import PlanOptParams
+
+
+@partial(jax.jit, static_argnames=("n_plan", "n_nodes"))
+def _anneal(order0, submit, wall, nodes, bb, n_nodes, bb_cap,
+            p: PlanOptParams, seed, n_plan: int):
+    """Best (order, mean-wait) over ``sa_restarts`` SA streams of
+    ``sa_steps`` swap proposals each, restricted to the first ``n_plan``
+    plan positions (the lookahead window)."""
+    submit = jnp.asarray(submit, jnp.float32)
+
+    def cost_of(order):
+        start = schedule_order(order, submit, wall, nodes, bb,
+                               n_nodes, bb_cap, fcfs=False)
+        return jnp.mean(start - submit)
+
+    key = prng_key(seed)
+    c0 = cost_of(order0)
+
+    def one_restart(r):
+        k_r = jax.random.fold_in(key, r)
+
+        def step(carry, s):
+            order, cost, best_o, best_c = carry
+            ks = jax.random.fold_in(k_r, s)
+            ki, kj, ka = jax.random.split(ks, 3)
+            i = jax.random.randint(ki, (), 0, n_plan)
+            j = jax.random.randint(kj, (), 0, n_plan)
+            prop = order.at[i].set(order[j]).at[j].set(order[i])
+            c_prop = cost_of(prop)
+            temp = p.t0_s * p.cooling ** s
+            accept = (c_prop <= cost) | (
+                jax.random.uniform(ka) < jnp.exp(-(c_prop - cost) / temp))
+            order = jnp.where(accept, prop, order)
+            cost = jnp.where(accept, c_prop, cost)
+            best_o = jnp.where(c_prop < best_c, prop, best_o)
+            best_c = jnp.minimum(c_prop, best_c)
+            return (order, cost, best_o, best_c), None
+
+        (_, _, best_o, best_c), _ = jax.lax.scan(
+            step, (order0, c0, order0, c0), jnp.arange(p.sa_steps))
+        return best_o, best_c
+
+    orders, costs = jax.vmap(one_restart)(jnp.arange(p.sa_restarts))
+    r = jnp.argmin(costs)           # ties -> lowest restart index
+    return orders[r], costs[r]
+
+
+def plan_schedule(queue: BatchQueue, params: Optional[PlanOptParams] = None,
+                  *, seed: int = 0
+                  ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """SA-optimized plan for ``queue``: ``(start, order, mean_wait)``.
+
+    ``start`` is the executed plan's per-job start vector (f64 seconds,
+    original job indexing), ``order`` the winning permutation, and
+    ``mean_wait`` its objective value.  The initial plan is arrival order;
+    only jobs submitted within ``params.lookahead_s`` of the first submit
+    are permuted — later arrivals keep arrival order at the plan's tail.
+    Deterministic per ``(queue, params, seed)``.
+    """
+    p = params if params is not None else PlanOptParams()
+    if type(p) is not PlanOptParams:
+        raise TypeError(
+            f"params must be PlanOptParams, got {type(p).__name__}")
+    order0 = arrival_order(queue)
+    a = queue.arrays()
+    window_end = float(a["submit"].min()) + float(p.lookahead_s)
+    n_plan = max(1, int((a["submit"][order0] <= window_end).sum()))
+    best_order, best_cost = _anneal(
+        jnp.asarray(order0), a["submit"], a["wall"], a["nodes"], a["bb"],
+        queue.cluster.n_nodes, queue.cluster.bb_total, p, seed, n_plan)
+    start = schedule_order(best_order, a["submit"], a["wall"], a["nodes"],
+                           a["bb"], queue.cluster.n_nodes,
+                           queue.cluster.bb_total, fcfs=False)
+    return (np.asarray(start, np.float64), np.asarray(best_order, np.int64),
+            float(best_cost))

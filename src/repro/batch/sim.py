@@ -1,0 +1,269 @@
+"""Reservation-aware batch scheduling: list-scheduling core + baselines.
+
+Three schedulers over one feasibility model.  A job occupies ``nodes``
+compute nodes **and** ``bb_bytes`` of the shared burst-buffer pool for its
+whole ``[start, start + walltime)`` interval; a start time is feasible when
+both resources fit at *every* instant of the interval.  Usage is piecewise
+constant, so feasibility only needs checking at the interval's left edge
+and at each already-placed job's start inside it — the event-point argument
+both Kopanski & Rzadca's simulator and classical backfilling rest on.
+
+  * :func:`schedule_order` — the jittable core: place jobs one at a time in
+    a given priority order, each at its earliest feasible start ``>=``
+    submit (optionally ``>=`` the previous job's start: the FCFS no-overtake
+    constraint).  One ``lax.scan`` over jobs, candidate/event points fully
+    vectorized — this is the move evaluator the simulated-annealing plan
+    optimizer (:mod:`repro.batch.plan`) calls hundreds of times per plan,
+    which is why it is the jitted piece.
+  * :func:`simulate_fcfs` — arrival order through the core with the
+    no-overtake constraint: pure head-of-line blocking.
+  * :func:`simulate_easy` — EASY backfilling (eager host loop): the queue
+    head gets a reservation at its earliest feasible time; later jobs may
+    start now only if they fit alongside that reservation, so the head is
+    never delayed.
+
+Waiting-time objectives (:func:`wait_metrics`) are the paper's: mean/p95
+wait and bounded slowdown ``max(1, (wait + run) / max(run, tau))``.
+:func:`validate_schedule` is the property-test oracle: it replays any start
+vector against the capacity model and raises on violation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.batch.queue import BatchQueue
+
+#: Relative capacity slack absorbing f32 summation noise when many
+#: ~1e11-byte reservations are added up; scheduler and validator share it,
+#: so "feasible" means the same thing on both sides of a property test.
+CAP_TOL = 1e-5
+
+#: Bounded-slowdown runtime floor (s) — the standard tau guarding the
+#: metric against tiny jobs dominating (10 s, as in the BSLD literature).
+BSLD_TAU_S = 10.0
+
+
+@partial(jax.jit, static_argnames=("fcfs",))
+def schedule_order(order, submit, wall, nodes, bb, n_nodes, bb_cap,
+                   *, fcfs: bool = False):
+    """Earliest-feasible-start list scheduling of ``order``.
+
+    ``order`` is a permutation of job indices ([N] i32); the remaining
+    arrays are the queue columns ([N]).  Returns per-job start times in
+    *original* job indexing ([N] f32).  With ``fcfs=True`` each job's start
+    is additionally constrained to be ``>=`` the previous ordered job's
+    start (no overtaking — the FCFS queue discipline).
+
+    Candidate starts for a job are its submit time and every placed job's
+    end (clamped up to the lower bound); a candidate is feasible when node
+    and BB usage plus the job's demand fit at the candidate instant and at
+    every placed start strictly inside the job's would-be interval.
+    """
+    order = jnp.asarray(order, jnp.int32)
+    submit = jnp.asarray(submit, jnp.float32)
+    wall = jnp.asarray(wall, jnp.float32)
+    nodes = jnp.asarray(nodes, jnp.float32)
+    bb = jnp.asarray(bb, jnp.float32)
+    n = order.shape[0]
+    node_lim = jnp.float32(n_nodes) * (1.0 + CAP_TOL)
+    bb_lim = jnp.float32(bb_cap) * (1.0 + CAP_TOL)
+
+    def body(carry, k):
+        p_start, p_end, p_nodes, p_bb, valid, prev_start, start_out = carry
+        j = order[k]
+        w_j, n_j, b_j = wall[j], nodes[j], bb[j]
+        lower = jnp.maximum(submit[j], prev_start) if fcfs else submit[j]
+
+        # candidates: the lower bound itself + every placed end (clamped)
+        cand = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                                jnp.where(valid, p_end, 0.0)])
+        cand = jnp.maximum(cand, lower)                       # [C], C = n+1
+        cand_ok = jnp.concatenate([jnp.ones((1,), bool), valid])
+
+        # evaluation points per candidate: the candidate instant + every
+        # placed start strictly inside (cand, cand + w_j)
+        pts = jnp.concatenate(
+            [cand[:, None], jnp.broadcast_to(p_start, (n + 1, n))], axis=1)
+        inside = (valid[None, :]
+                  & (p_start[None, :] > cand[:, None])
+                  & (p_start[None, :] < cand[:, None] + w_j))
+        relevant = jnp.concatenate(
+            [jnp.ones((n + 1, 1), bool), inside], axis=1)     # [C, P]
+
+        active = (valid[None, None, :]
+                  & (p_start[None, None, :] <= pts[:, :, None])
+                  & (p_end[None, None, :] > pts[:, :, None]))  # [C, P, N]
+        use_nodes = jnp.sum(
+            jnp.where(active, p_nodes[None, None, :], 0.0), axis=2)
+        use_bb = jnp.sum(jnp.where(active, p_bb[None, None, :], 0.0), axis=2)
+        pt_ok = ((use_nodes + n_j <= node_lim)
+                 & (use_bb + b_j <= bb_lim))                   # [C, P]
+        feasible = cand_ok & jnp.all(pt_ok | ~relevant, axis=1)
+
+        start_j = jnp.min(jnp.where(feasible, cand, jnp.inf))
+        carry = (p_start.at[k].set(start_j),
+                 p_end.at[k].set(start_j + w_j),
+                 p_nodes.at[k].set(n_j), p_bb.at[k].set(b_j),
+                 valid.at[k].set(True), start_j,
+                 start_out.at[j].set(start_j))
+        return carry, None
+
+    init = (jnp.full((n,), jnp.inf, jnp.float32),      # p_start
+            jnp.full((n,), -jnp.inf, jnp.float32),     # p_end
+            jnp.zeros((n,), jnp.float32),              # p_nodes
+            jnp.zeros((n,), jnp.float32),              # p_bb
+            jnp.zeros((n,), bool),                     # valid
+            jnp.float32(0.0),                          # prev_start
+            jnp.zeros((n,), jnp.float32))              # start_out
+    carry, _ = jax.lax.scan(body, init, jnp.arange(n))
+    return carry[-1]
+
+
+def _cols(queue: BatchQueue):
+    a = queue.arrays()
+    return (a["submit"], a["wall"], a["nodes"], a["bb"],
+            int(queue.cluster.n_nodes), float(queue.cluster.bb_total))
+
+
+def arrival_order(queue: BatchQueue) -> np.ndarray:
+    """Stable submit-time order (ties keep declaration order)."""
+    return np.argsort(queue.arrays()["submit"], kind="stable").astype(np.int32)
+
+
+def simulate_fcfs(queue: BatchQueue) -> np.ndarray:
+    """First-come-first-served with node + BB reservations: arrival order,
+    no overtaking — a big BB reservation at the head blocks everyone."""
+    submit, wall, nodes, bb, n_nodes, bb_cap = _cols(queue)
+    start = schedule_order(arrival_order(queue), submit, wall, nodes, bb,
+                           n_nodes, bb_cap, fcfs=True)
+    return np.asarray(start, np.float64)
+
+
+def _usage_at(t, ivals):
+    nd = sum(i[2] for i in ivals if i[0] <= t < i[1])
+    b = sum(i[3] for i in ivals if i[0] <= t < i[1])
+    return nd, b
+
+
+def _fits(t, w, nd, b, ivals, n_nodes, bb_cap) -> bool:
+    pts = [t] + [s for (s, _e, _n, _b) in ivals if t < s < t + w]
+    for x in pts:
+        un, ub = _usage_at(x, ivals)
+        if un + nd > n_nodes * (1.0 + CAP_TOL):
+            return False
+        if ub + b > bb_cap * (1.0 + CAP_TOL):
+            return False
+    return True
+
+
+def _earliest_fit(t, w, nd, b, ivals, n_nodes, bb_cap) -> float:
+    for c in sorted({t, *(e for (_s, e, _n, _b) in ivals if e > t)}):
+        if _fits(c, w, nd, b, ivals, n_nodes, bb_cap):
+            return c
+    raise AssertionError("no feasible start — job exceeds cluster capacity")
+
+
+def simulate_easy(queue: BatchQueue) -> np.ndarray:
+    """EASY backfilling, BB-reservation-aware (eager host event loop).
+
+    At every arrival/completion event: start the queue head whenever it
+    fits; otherwise give it a reservation at its earliest feasible time and
+    let later queued jobs start *now* only if they also fit alongside that
+    reservation — backfilling never delays the head.
+    """
+    submit, wall, nodes, bb, n_nodes, bb_cap = _cols(queue)
+    n = len(submit)
+    order = arrival_order(queue)
+    start = np.full(n, np.inf)
+    ivals: list[tuple] = []        # (start, end, nodes, bb) of started jobs
+    queued: list[int] = []
+    i, t = 0, 0.0
+    while i < n or queued:
+        while i < n and submit[order[i]] <= t + 1e-9:
+            queued.append(int(order[i]))
+            i += 1
+        while queued:
+            h = queued[0]
+            if _fits(t, wall[h], nodes[h], bb[h], ivals, n_nodes, bb_cap):
+                start[h] = t
+                ivals.append((t, t + wall[h], int(nodes[h]), float(bb[h])))
+                queued.pop(0)
+                continue
+            t_res = _earliest_fit(t, wall[h], nodes[h], bb[h], ivals,
+                                  n_nodes, bb_cap)
+            virt = ivals + [(t_res, t_res + wall[h], int(nodes[h]),
+                             float(bb[h]))]
+            for q in list(queued[1:]):
+                if _fits(t, wall[q], nodes[q], bb[q], virt, n_nodes, bb_cap):
+                    start[q] = t
+                    entry = (t, t + wall[q], int(nodes[q]), float(bb[q]))
+                    ivals.append(entry)
+                    virt.append(entry)
+                    queued.remove(q)
+            break
+        nxt = []
+        if i < n:
+            nxt.append(submit[order[i]])
+        if queued:
+            ends = [e for (_s, e, _n, _b) in ivals if e > t]
+            if ends:
+                nxt.append(min(ends))
+        if not nxt:
+            break
+        t = min(nxt)
+    assert np.all(np.isfinite(start)), "EASY left a job unscheduled"
+    return start
+
+
+def wait_metrics(queue: BatchQueue, start,
+                 *, tau_s: float = BSLD_TAU_S) -> Dict[str, float]:
+    """The waiting-time objectives (paper + arXiv:2109.00082 §5): mean,
+    p95 and max wait, mean/p95 bounded slowdown, and makespan."""
+    a = queue.arrays()
+    start = np.asarray(start, np.float64)
+    wait = np.maximum(start - a["submit"], 0.0)
+    bsld = np.maximum(1.0, (wait + a["wall"]) / np.maximum(a["wall"], tau_s))
+    return {
+        "mean_wait_s": float(wait.mean()),
+        "p95_wait_s": float(np.percentile(wait, 95)),
+        "max_wait_s": float(wait.max()),
+        "mean_bsld": float(bsld.mean()),
+        "p95_bsld": float(np.percentile(bsld, 95)),
+        "makespan_s": float((start + a["wall"]).max() - a["submit"].min()),
+    }
+
+
+def validate_schedule(queue: BatchQueue, start) -> None:
+    """Property-test oracle: raise ``AssertionError`` unless ``start`` is a
+    feasible schedule — every start at/after its submit and node/BB usage
+    within capacity at every start event (usage is piecewise constant and
+    only increases at starts, so start instants are the only maxima)."""
+    a = queue.arrays()
+    start = np.asarray(start, np.float64)
+    assert np.all(np.isfinite(start)), "non-finite start time"
+    # f32 starts of late events lose sub-ms precision; compare with slack
+    slack = 1e-4 * max(1.0, float(np.abs(start).max()))
+    assert np.all(start >= a["submit"] - slack), (
+        f"job starts before submit: {start - a['submit']}")
+    end = start + a["wall"]
+    n_lim = queue.cluster.n_nodes * (1.0 + 2 * CAP_TOL)
+    b_lim = queue.cluster.bb_total * (1.0 + 2 * CAP_TOL)
+    # usage is checked just *after* each start event: a handoff where one
+    # job's f32 end rounds an ulp past the successor's start must not read
+    # as an overlap, and any real violation outlasts a few time ulps
+    eps = max(1e-6, float(np.abs(end).max()) * 4 * 2.0 ** -23)
+    for x0 in start:
+        x = x0 + eps
+        on = (start <= x) & (end > x)
+        assert a["nodes"][on].sum() <= n_lim, (
+            f"node capacity violated at t={x}: "
+            f"{a['nodes'][on].sum()} > {queue.cluster.n_nodes}")
+        assert a["bb"][on].sum() <= b_lim, (
+            f"BB capacity violated at t={x}: "
+            f"{a['bb'][on].sum():.4g} > {queue.cluster.bb_total:.4g}")

@@ -44,9 +44,13 @@ import numpy as np
 #: μ = 0.5 s (500 ticks at dt=1 ms) works best on this substrate.
 DEFAULT_MU_TICKS = 500
 
-#: Structural fields: they change the *trace* (scan cadence), not just the
-#: numbers flowing through it, so they are pytree metadata, never leaves.
-STATIC_FIELDS: FrozenSet[str] = frozenset({"mu_ticks"})
+#: Structural fields: they change the *trace* (scan cadence / scan length),
+#: not just the numbers flowing through it, so they are pytree metadata,
+#: never leaves.  ``sa_steps``/``sa_restarts`` set the simulated-annealing
+#: scan length in the batch plane (:mod:`repro.batch.plan`), exactly as
+#: ``mu_ticks`` sets the interval cadence in the serving plane.
+STATIC_FIELDS: FrozenSet[str] = frozenset({"mu_ticks", "sa_steps",
+                                           "sa_restarts"})
 
 
 def _require(cond, msg: str) -> None:
@@ -307,3 +311,40 @@ class PlanParams(_IntervalParams):
                  f"ema_alpha must be in (0, 1], got {self.ema_alpha}")
         _require(self.ctrl_overhead_s >= 0.0,
                  f"ctrl_overhead_s must be >= 0, got {self.ctrl_overhead_s}")
+
+
+@schema
+class PlanOptParams(SchedulerParams):
+    """Plan-*optimization* knobs for the batch plane (arXiv:2109.00082 §4 /
+    the 2111.10200 thesis): simulated annealing over job orderings inside a
+    lookahead window, evaluated with the reservation-aware list scheduler
+    (:func:`repro.batch.sim.schedule_order`).
+
+    Not a serving-plane scheduler schema — it parameterizes
+    :func:`repro.batch.plan.plan_schedule` and travels through the same
+    pytree/params-hash machinery so annealing sweeps are attributable and
+    workspace-cacheable.  ``sa_steps``/``sa_restarts`` set the SA scan
+    length/width, so they are structural (:data:`STATIC_FIELDS`): changing
+    them recompiles; ``t0_s``/``cooling`` are traced leaves.  ``t0_s`` is
+    the initial Metropolis temperature in *seconds of mean waiting time*
+    (the objective's unit); ``lookahead_s`` bounds the planning window —
+    jobs submitted beyond it keep their arrival order at the plan's tail.
+    """
+
+    sa_steps: int = 400
+    sa_restarts: int = 2
+    t0_s: float = 600.0
+    cooling: float = 0.985
+    lookahead_s: float = 1e9
+
+    def _validate(self):
+        super()._validate()
+        _require(self.sa_steps >= 1,
+                 f"sa_steps must be >= 1, got {self.sa_steps}")
+        _require(self.sa_restarts >= 1,
+                 f"sa_restarts must be >= 1, got {self.sa_restarts}")
+        _require(self.t0_s > 0.0, f"t0_s must be > 0, got {self.t0_s}")
+        _require((0.0 < self.cooling) & (self.cooling <= 1.0),
+                 f"cooling must be in (0, 1], got {self.cooling}")
+        _require(self.lookahead_s > 0.0,
+                 f"lookahead_s must be > 0, got {self.lookahead_s}")

@@ -1,0 +1,274 @@
+"""Batch plane: reservation-aware scheduling, SA determinism, the bridge.
+
+Coverage map (ISSUE 10):
+
+  * **feasibility model** — hand-built queues pin FCFS head-of-line
+    blocking and EASY's backfill-without-delaying-the-head, both
+    BB-reservation-aware;
+  * **waiting-time metrics** — mean/p95 wait and bounded slowdown against
+    hand-computed values;
+  * **annealing** — same seed → bit-identical plan; any seed → a schedule
+    that never violates node/BB capacity (property test through the
+    :func:`repro.batch.sim.validate_schedule` oracle); plan never loses to
+    FCFS on its own objective;
+  * **bridge** — admitted timelines lower through the scenario algebra and
+    run conserving on the engine;
+  * **campaign** — per-seed results cache in the workspace keyed on the
+    queue-spec hash and reload bit-identically;
+  * **facade** — ``Experiment.batch`` / ``repro.api.BatchExperiment``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import BatchExperiment, Experiment
+from repro.batch import (BATCH_POLICIES, BatchJob, BatchQueue, ClusterSpec,
+                         make_queue, plan_schedule, queue_preset,
+                         queue_presets, simulate_easy, simulate_fcfs,
+                         to_scenario, validate_schedule, wait_metrics)
+from repro.core.params import STATIC_FIELDS, PlanOptParams
+from repro.workspace import WorkspaceStore
+
+#: Fast SA config for tests: enough steps to improve, cheap to jit.
+P_FAST = PlanOptParams(sa_steps=80, sa_restarts=2)
+
+#: nodes are plentiful, the BB pool fits one big job at a time — the
+#: hand-analyzable contention kernel every baseline test below uses.
+CL = ClusterSpec(n_nodes=4, n_servers=1, bb_per_server=100.0)
+HANDQ = make_queue([
+    dict(submit_s=0.0, walltime_s=10.0, nodes=1, bb_bytes=80.0),
+    dict(submit_s=1.0, walltime_s=10.0, nodes=1, bb_bytes=80.0),
+    dict(submit_s=2.0, walltime_s=5.0, nodes=1, bb_bytes=10.0),
+], CL)
+
+
+class TestQueueModel:
+    def test_validation_rejects_impossible_jobs(self):
+        with pytest.raises(ValueError, match="nodes"):
+            make_queue([dict(submit_s=0, walltime_s=1, nodes=99,
+                             bb_bytes=0)], CL)
+        with pytest.raises(ValueError, match="BB"):
+            make_queue([dict(submit_s=0, walltime_s=1, nodes=1,
+                             bb_bytes=1e18)], CL)
+        with pytest.raises(ValueError, match="walltime"):
+            BatchJob(submit_s=0.0, walltime_s=0.0, nodes=1, bb_bytes=0.0)
+
+    def test_presets_are_deterministic_and_valid(self):
+        for name in queue_presets():
+            a = queue_preset(name, n_jobs=10, seed=3)
+            b = queue_preset(name, n_jobs=10, seed=3)
+            assert a.queue_hash() == b.queue_hash()
+            assert a.n_jobs == 10
+            # a different seed is a different queue
+            c = queue_preset(name, n_jobs=10, seed=4)
+            assert c.queue_hash() != a.queue_hash()
+
+    def test_queue_hash_covers_jobs_and_cluster(self):
+        q = queue_preset("mixed", n_jobs=6, seed=0)
+        bigger = BatchQueue(jobs=q.jobs, cluster=dataclasses.replace(
+            q.cluster, n_nodes=q.cluster.n_nodes + 1))
+        assert bigger.queue_hash() != q.queue_hash()
+        jobs = list(q.jobs)
+        jobs[0] = dataclasses.replace(jobs[0],
+                                      walltime_s=jobs[0].walltime_s + 1.0)
+        assert BatchQueue(jobs=tuple(jobs),
+                          cluster=q.cluster).queue_hash() != q.queue_hash()
+
+
+class TestBaselines:
+    def test_fcfs_head_of_line_blocking(self):
+        start = simulate_fcfs(HANDQ)
+        validate_schedule(HANDQ, start)
+        # j1's BB reservation conflicts with j0 -> waits for j0's end; j2
+        # would fit immediately but FCFS forbids overtaking
+        np.testing.assert_allclose(start, [0.0, 10.0, 10.0], atol=1e-4)
+
+    def test_easy_backfills_without_delaying_head(self):
+        start = simulate_easy(HANDQ)
+        validate_schedule(HANDQ, start)
+        # head (j1) keeps its reservation at t=10; j2 fits alongside j0's
+        # BB residency right at its submit -> backfilled at t=2
+        np.testing.assert_allclose(start, [0.0, 10.0, 2.0], atol=1e-4)
+
+    def test_easy_reservation_is_never_delayed(self):
+        # a backfill candidate that WOULD delay the head must wait: same
+        # queue but j2 now runs long enough to overlap the reservation and
+        # conflicts with it on BB
+        q = make_queue([
+            dict(submit_s=0.0, walltime_s=10.0, nodes=1, bb_bytes=80.0),
+            dict(submit_s=1.0, walltime_s=10.0, nodes=1, bb_bytes=80.0),
+            dict(submit_s=2.0, walltime_s=20.0, nodes=1, bb_bytes=30.0),
+        ], CL)
+        start = simulate_easy(q)
+        validate_schedule(q, start)
+        assert start[1] == pytest.approx(10.0, abs=1e-4)   # head on time
+        assert start[2] >= 10.0 - 1e-4                     # not backfilled
+
+    @pytest.mark.parametrize("preset", queue_presets())
+    @pytest.mark.parametrize("seed", (0, 1))
+    def test_baselines_always_feasible(self, preset, seed):
+        q = queue_preset(preset, n_jobs=10, seed=seed)
+        validate_schedule(q, simulate_fcfs(q))
+        validate_schedule(q, simulate_easy(q))
+
+
+class TestWaitMetrics:
+    def test_hand_computed_values(self):
+        m = wait_metrics(HANDQ, np.array([0.0, 10.0, 10.0]))
+        # waits: [0, 9, 8]
+        assert m["mean_wait_s"] == pytest.approx(17.0 / 3.0)
+        assert m["max_wait_s"] == pytest.approx(9.0)
+        assert m["p95_wait_s"] == pytest.approx(
+            np.percentile([0.0, 9.0, 8.0], 95))
+        # BSLD (tau=10): [1, (9+10)/10, (8+5)/10]
+        assert m["mean_bsld"] == pytest.approx((1.0 + 1.9 + 1.3) / 3.0)
+        assert m["makespan_s"] == pytest.approx(20.0)
+
+    def test_bsld_floor_guards_tiny_jobs(self):
+        q = make_queue([dict(submit_s=0.0, walltime_s=0.5, nodes=1,
+                             bb_bytes=0.0)], CL)
+        m = wait_metrics(q, np.array([1.0]))
+        # wait 1, run 0.5: un-bounded slowdown would be 3x; tau=10 bounds it
+        assert m["mean_bsld"] == pytest.approx(max(1.0, 1.5 / 10.0))
+
+    def test_validator_catches_violations(self):
+        with pytest.raises(AssertionError, match="BB capacity"):
+            validate_schedule(HANDQ, np.array([0.0, 1.0, 12.0]))
+        with pytest.raises(AssertionError, match="before submit"):
+            validate_schedule(HANDQ, np.array([0.0, 10.0, 1.0]))
+
+
+class TestPlanAnnealing:
+    def test_same_seed_is_bit_identical(self):
+        q = queue_preset("bb-heavy", n_jobs=10, seed=0)
+        s1, o1, c1 = plan_schedule(q, P_FAST, seed=7)
+        s2, o2, c2 = plan_schedule(q, P_FAST, seed=7)
+        np.testing.assert_array_equal(s1, s2)
+        np.testing.assert_array_equal(o1, o2)
+        assert c1 == c2
+
+    @pytest.mark.parametrize("preset", queue_presets())
+    @pytest.mark.parametrize("seed", (0, 1, 2))
+    def test_any_seed_never_violates_capacity(self, preset, seed):
+        """The property test: whatever ordering SA lands on, the list
+        scheduler only emits feasible starts."""
+        q = queue_preset(preset, n_jobs=10, seed=0)
+        start, order, _ = plan_schedule(q, P_FAST, seed=seed)
+        validate_schedule(q, start)
+        assert sorted(order.tolist()) == list(range(q.n_jobs))
+
+    def test_plan_beats_fcfs_on_bb_contention(self):
+        q = queue_preset("bb-heavy", n_jobs=12, seed=0)
+        fcfs = wait_metrics(q, simulate_fcfs(q))["mean_wait_s"]
+        plan = wait_metrics(q, plan_schedule(q, P_FAST, seed=0)[0])[
+            "mean_wait_s"]
+        assert plan <= fcfs
+
+    def test_lookahead_pins_tail_to_arrival_order(self):
+        q = queue_preset("mixed", n_jobs=8, seed=1)
+        p = dataclasses.replace(P_FAST, lookahead_s=1e-6)
+        _, order, _ = plan_schedule(q, p, seed=0)
+        submit = q.arrays()["submit"]
+        # a degenerate window leaves (almost) everything in arrival order
+        assert np.all(np.diff(submit[order][1:]) >= 0)
+
+    def test_params_schema(self):
+        assert {"sa_steps", "sa_restarts"} <= STATIC_FIELDS
+        assert PlanOptParams().params_hash() != P_FAST.params_hash()
+        for bad in (dict(sa_steps=0), dict(sa_restarts=0), dict(t0_s=0.0),
+                    dict(cooling=0.0), dict(cooling=1.5),
+                    dict(lookahead_s=0.0)):
+            with pytest.raises(ValueError):
+                PlanOptParams(**bad)
+        # structural knobs are pytree metadata, numeric knobs are leaves
+        assert set(PlanOptParams.numeric_fields()) == {
+            "t0_s", "cooling", "lookahead_s"}
+
+
+class TestFacadeAndBridge:
+    def test_facade_entry_points(self):
+        bx = Experiment.batch("mixed", n_jobs=6, seed=0)
+        assert isinstance(bx, BatchExperiment)
+        assert bx.presets() == queue_presets()
+        with pytest.raises(ValueError, match="unknown batch policy"):
+            bx.run("srtf")
+        with pytest.raises(ValueError, match="unknown queue preset"):
+            BatchExperiment("nope")
+
+    def test_compare_runs_every_policy(self):
+        bx = BatchExperiment("longtail", n_jobs=8, seed=0, params=P_FAST)
+        table = bx.compare()
+        assert set(table) == set(BATCH_POLICIES)
+        for res in table.values():
+            validate_schedule(bx.queue, res.start)
+            assert res.mean_wait_s >= 0.0
+            assert res.metrics["p95_wait_s"] >= 0.0
+
+    def test_bridge_scenario_roundtrip(self):
+        bx = BatchExperiment("bb-heavy", n_jobs=6, seed=0, params=P_FAST)
+        res = bx.run("easy")
+        scn = bx.to_scenario(res, horizon_s=1.0)
+        assert scn.n_jobs == 6
+        rebuilt = type(scn).from_json(scn.to_json())
+        assert [j["user"] for j in rebuilt.jobs] == list(range(6))
+        # striping follows the BB reservation vs per-server capacity
+        sizes = [j["size"] for j in scn.jobs]
+        assert max(sizes) <= bx.queue.cluster.n_servers
+        assert max(sizes) > 1    # bb-heavy jobs stripe over both servers
+
+    def test_bridge_drives_the_engine_conserving(self):
+        bx = BatchExperiment("bb-heavy", n_jobs=6, seed=0, params=P_FAST)
+        res = bx.run("plan")
+        exp, horizon = bx.to_experiment(res, scheduler="themis",
+                                        horizon_s=1.0)
+        rr = exp.run(horizon)
+        assert int(rr.dropped) == 0
+        issued = np.asarray(rr.issued)
+        completed = np.asarray(rr.completed)
+        backlog = np.asarray(rr.state.qcount).sum(axis=0)
+        np.testing.assert_array_equal(completed[:6] + backlog[:6],
+                                      issued[:6])
+        assert issued[:6].sum() > 0
+
+
+class TestBatchCampaign:
+    def test_cache_hits_are_bit_identical(self, tmp_path):
+        bx = BatchExperiment("mixed", n_jobs=8, seed=0, params=P_FAST)
+        store = WorkspaceStore(tmp_path / "ws")
+        first = bx.sweep_seeds("plan", [0, 1], store=store)
+        again = bx.sweep_seeds("plan", [0, 1], store=store)
+        for a, b in zip(first, again):
+            np.testing.assert_array_equal(a.start, b.start)
+            np.testing.assert_array_equal(a.order, b.order)
+            assert a.metrics == b.metrics
+
+    def test_growing_the_sweep_computes_only_new_points(self, tmp_path):
+        from repro.batch.campaign import run_batch_campaign
+        bx = BatchExperiment("mixed", n_jobs=8, seed=0, params=P_FAST)
+        store = WorkspaceStore(tmp_path / "ws")
+        _, r1 = run_batch_campaign(bx, ("fcfs", "plan"), [0],
+                                   store=store)
+        assert (r1["reused"], r1["computed"]) == (0, 2)
+        _, r2 = run_batch_campaign(bx, ("fcfs", "plan"), [0, 1],
+                                   store=store)
+        assert (r2["reused"], r2["computed"]) == (2, 2)
+
+    def test_key_separates_queues_and_params(self, tmp_path):
+        from repro.batch.campaign import batch_point_key
+        store = WorkspaceStore(tmp_path / "ws")
+        bx_a = BatchExperiment("mixed", n_jobs=8, seed=0, params=P_FAST)
+        bx_b = BatchExperiment("mixed", n_jobs=8, seed=1, params=P_FAST)
+        ka = batch_point_key(bx_a, "plan", 0, "c", bx_a.queue_hash())
+        kb = batch_point_key(bx_b, "plan", 0, "c", bx_b.queue_hash())
+        assert ka != kb                      # different queue -> different key
+        bx_c = BatchExperiment("mixed", n_jobs=8, seed=0,
+                               params=PlanOptParams(sa_steps=81,
+                                                    sa_restarts=2))
+        kc = batch_point_key(bx_c, "plan", 0, "c", bx_c.queue_hash())
+        assert kc != ka                      # retuned annealer -> new line
+        # baselines ignore annealer params entirely
+        kf_a = batch_point_key(bx_a, "fcfs", 0, "c", bx_a.queue_hash())
+        kf_c = batch_point_key(bx_c, "fcfs", 0, "c", bx_c.queue_hash())
+        assert kf_a == kf_c
+        assert store.get(ka) is None         # and none of this touched disk

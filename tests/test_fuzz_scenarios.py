@@ -3,8 +3,10 @@
 The PR-9 tentpole's testing half: scenario diversity as a weapon.  A
 deterministic generator builds random-but-valid combinator trees (bounded
 jobs/phases/horizon, grid-aligned times so seconds->tick rounding is
-never within ulp slush of a boundary), lowers each once through the one
-canonical pipeline, and checks three invariant families:
+never within ulp slush of a boundary; leaves mix striped multi-server
+jobs — ``size > 1`` with an explicit ``servers`` set — with pinned and
+default-spread placements), lowers each once through the one canonical
+pipeline, and checks three invariant families:
 
   * **combinator laws** — ``repeat(n)`` == n-fold ``concat``, ``overlay``
     commutes on disjoint job sets, ``shift(0)``/``mask(full)`` are
@@ -48,7 +50,8 @@ SEEDS = tuple(range(FUZZ_EXAMPLES))
 #: float-associativity ulp can never flip a seconds->tick rounding.
 GRID = 0.05
 MAX_JOBS = 6          # generator bound: at most 4 leaves + slack
-GEOM = dict(dt=1e-3, n_servers=1, max_jobs=MAX_JOBS, ring_cap=512)
+N_SERVERS = 2         # multi-server geometry so striping leaves mean something
+GEOM = dict(dt=1e-3, n_servers=N_SERVERS, max_jobs=MAX_JOBS, ring_cap=512)
 
 
 def _gen_leaf(rng, users):
@@ -58,6 +61,14 @@ def _gen_leaf(rng, users):
     spec = dict(user=u, procs=int(rng.choice([2, 4, 6])),
                 req_mb=int(rng.choice([1, 2, 5])),
                 phases=[dict(start_s=start, duration_s=dur)])
+    # placement axis: striped multi-server jobs (size > 1 with an explicit
+    # server set), single-server pinned jobs, and default spread
+    place = rng.random()
+    if place < 0.30:
+        spec["size"] = N_SERVERS
+        spec["servers"] = list(range(N_SERVERS))
+    elif place < 0.50:
+        spec["servers"] = [int(rng.integers(0, N_SERVERS))]
     r = rng.random()
     if r < 0.25:
         spec["phases"][0].update(arrival="interval", interval_s=GRID)
@@ -193,7 +204,7 @@ class TestCombinatorLaws:
 
 def _experiment(jobs, scheduler):
     return Experiment(policy="job-fair", scheduler=scheduler,
-                      n_servers=1, n_workers=2,
+                      n_servers=N_SERVERS, n_workers=2,
                       max_jobs=MAX_JOBS).add_jobs(jobs)
 
 
@@ -255,24 +266,25 @@ class TestSharesCrossPlane:
         view_s = svc.cluster._tick_view()
         table_s = svc.cluster._table()
 
-        # engine plane: mirror the same queue depths onto the lowered table
-        qcount = np.zeros((1, cfg.max_jobs), np.int32)
-        qcount[0, :len(jobs)] = depths
+        # engine plane: mirror the service's observed [S, J] queue depths
+        # (file placement routes each job's burst to its server(s)) onto
+        # the lowered table — per job, nothing was lost in routing
+        qcount = np.asarray(view_s.qcount, np.int32)
+        assert qcount.shape == (cfg.n_servers, cfg.max_jobs)
+        np.testing.assert_array_equal(
+            qcount[:, :len(jobs)].sum(axis=0), depths,
+            err_msg=f"seed {seed}: service queues diverge from submitted")
         demand = jnp.asarray(qcount > 0)
         if sched.uses_segments:
             seg = sync_segments(exp.policy, table, demand)
             synced = np.asarray(demand).any(axis=0)
         else:
-            seg = jnp.zeros((1, cfg.max_jobs), jnp.float32)
+            seg = jnp.zeros((cfg.n_servers, cfg.max_jobs), jnp.float32)
             synced = np.zeros((cfg.max_jobs,), bool)
         view_e = TickView(
             qcount=jnp.asarray(qcount), known=jnp.asarray(qcount > 0),
             seg=jnp.asarray(seg), synced=jnp.asarray(synced),
             live=jnp.ones((cfg.max_jobs,), bool))
-
-        np.testing.assert_array_equal(
-            np.asarray(view_s.qcount), qcount,
-            err_msg=f"seed {seed}: service queues diverge from submitted")
         np.testing.assert_array_equal(
             np.asarray(sched.tick_shares(cfg, table, view_e)),
             np.asarray(sched.tick_shares(svc.cluster.cfg, table_s, view_s)),

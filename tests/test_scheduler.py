@@ -268,6 +268,46 @@ class TestFunctionalPlaneSchedulers:
         assert f.read(8) == b"z" * 8
 
 
+class TestPlanFifoFallback:
+    """Pin of ``plan_select``'s documented degradation: an empty plan (cold
+    EMA, fresh jobs) must serve in FIFO order *exactly*, so estimation lag
+    can never block service or invent a new ordering."""
+
+    def test_cold_plan_select_equals_fifo_select(self):
+        skip_unless("plan")
+        from repro.core import baselines
+        rng = np.random.default_rng(0)
+        s_, j_ = 2, 6
+        aux = baselines.init_aux(s_, j_)   # cold: ema == plan == 0
+        for _ in range(25):
+            head = jnp.asarray(rng.uniform(0.0, 1.0, (s_, j_)), jnp.float32)
+            demand = jnp.asarray(rng.random((s_, j_)) < 0.5)
+            np.testing.assert_array_equal(
+                np.asarray(baselines.plan_select(aux, head, demand)),
+                np.asarray(baselines.fifo_select(head, demand)))
+
+    def test_cold_plan_engine_run_is_fifo_bit_identical(self):
+        skip_unless("plan")
+        from repro.core.params import PlanParams
+        # Phases start strictly after t=0, so the tick-0 interval update
+        # sees empty queues: the EMA (hence the plan) stays zero and a huge
+        # mu_ticks prevents any later replan — every select takes the FIFO
+        # fallback for the whole run.
+        jobs = [dict(user=0, size=1, procs=6, req_mb=10,
+                     start_s=0.05, end_s=1.0),
+                dict(user=1, size=1, procs=3, req_mb=4,
+                     start_s=0.05, end_s=1.0)]
+        plan_res, _ = simulate(
+            "plan", jobs, seconds=1.0, n_workers=4, tick_impl="ref",
+            scheduler_params=PlanParams(mu_ticks=10**6,
+                                        ctrl_overhead_s=0.0))
+        fifo_res, _ = simulate("fifo", jobs, seconds=1.0, n_workers=4,
+                               tick_impl="ref")
+        for key in ("gbps", "issued", "completed", "dropped"):
+            np.testing.assert_array_equal(np.asarray(plan_res[key]),
+                                          np.asarray(fifo_res[key]))
+
+
 def _bb_first_window_share(scheduler: str, n: int = 200) -> tuple[float, int]:
     """Functional plane: two equal jobs submit ``n`` interleaved writes each;
     returns job 1's share of the first ``n`` completions and the total count

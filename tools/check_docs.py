@@ -9,10 +9,10 @@ Two independent checks, both offline:
    spaces to hyphens).
 
 2. **Blocks** (``--run-blocks`` to run just this): the fenced ``python``
-   blocks in docs/architecture.md, docs/scenarios.md and docs/workspace.md
-   execute top-to-bottom in one shared namespace per page — the pages promise they
-   are live, this enforces it.  Shrink the simulated horizons with
-   ``EXAMPLE_SECONDS`` (CI uses 2).
+   blocks in docs/architecture.md, docs/batch.md, docs/scenarios.md and
+   docs/workspace.md execute top-to-bottom in one shared namespace per
+   page — the pages promise they are live, this enforces it.  Shrink the
+   simulated horizons with ``EXAMPLE_SECONDS`` (CI uses 2).
 
 Exit status is the number of failures (0 = healthy).  No network access.
 
@@ -28,6 +28,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 BLOCK_PAGES = [REPO / "docs" / "architecture.md",
+               REPO / "docs" / "batch.md",
                REPO / "docs" / "scenarios.md",
                REPO / "docs" / "workspace.md"]
 
